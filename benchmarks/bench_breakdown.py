@@ -1,0 +1,42 @@
+"""Fig. 8: component breakdown — Predictor-only, Scheduler-only, AGORA with
+both but separately optimized, AGORA co-optimized (balanced goal)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.cluster.catalog import paper_cluster
+from repro.cluster.workloads import dag1, dag2
+from repro.core import baselines as bl
+from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.dag import flatten
+from repro.core.objectives import Goal
+
+
+def main(seed: int = 1):
+    cluster = paper_cluster()
+    goal = Goal.balanced()
+    for dag_fn in (dag1, dag2):
+        d = dag_fn(cluster)
+        prob = flatten([d], cluster.num_resources)
+        ref = reference_point(prob, cluster)
+        plans = {
+            "predictor-only": bl.predictor_only_plan(prob, cluster, goal),
+            "scheduler-only": bl.scheduler_only_plan(prob, cluster),
+            "agora-separate": bl.agora_separate_plan(prob, cluster, goal),
+            "agora-coopt": anneal(prob, cluster, goal, AnnealConfig(seed=seed),
+                                  ref),
+        }
+        co = plans["agora-coopt"]
+        sep = plans["agora-separate"]
+        for name, sol in plans.items():
+            e = goal.energy(sol.makespan, sol.cost, *ref)
+            emit(f"fig8/{d.name}/{name}", sol.solve_seconds * 1e6,
+                 f"M={sol.makespan:.0f}s C=${sol.cost:.2f} energy={e:.3f}")
+        emit(f"fig8/{d.name}/coopt_vs_separate", co.solve_seconds * 1e6,
+             f"faster={1 - co.makespan / sep.makespan:.1%} "
+             f"cheaper={1 - co.cost / sep.cost:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Fig. 9: cost/performance of AGORA across the goal weight sweep
+(w = 0 cost, 0.25, 0.5 balanced, 0.75, 1 runtime)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.cluster.catalog import paper_cluster
+from repro.cluster.workloads import dag1, dag2
+from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.dag import flatten
+from repro.core.objectives import Goal
+
+
+def main(seed: int = 1):
+    cluster = paper_cluster()
+    for dag_fn in (dag1, dag2):
+        d = dag_fn(cluster)
+        prob = flatten([d], cluster.num_resources)
+        ref = reference_point(prob, cluster)
+        prev_m = None
+        for w in (0.0, 0.25, 0.5, 0.75, 1.0):
+            sol = anneal(prob, cluster, Goal(w=w), AnnealConfig(seed=seed), ref)
+            emit(f"fig9/{d.name}/w{w}", sol.solve_seconds * 1e6,
+                 f"M={sol.makespan:.0f}s C=${sol.cost:.2f}")
+            prev_m = sol.makespan
+
+
+if __name__ == "__main__":
+    main()

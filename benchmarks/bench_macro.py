@@ -1,0 +1,76 @@
+"""Fig. 11: Alibaba-like multi-DAG production trace (synthetic, §5.5.1
+recipe — USL scaling with random alpha/beta fit to one trace run per task).
+AGORA triggered per submission window (15 simulated minutes); compared
+against the default-Airflow baseline on total cost, total completion time,
+and the per-DAG improvement CDF."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster.catalog import alibaba_cluster
+from repro.cluster.workloads import synth_trace
+from repro.core.annealer import AnnealConfig, anneal
+from repro.core.baselines import airflow_plan
+from repro.core.dag import flatten
+from repro.core.objectives import Goal
+
+
+def _per_dag_completion(prob, sol):
+    out = {}
+    for di, name in enumerate(prob.dag_names):
+        mask = prob.dag_of == di
+        out[name] = float(sol.finish[mask].max() - prob.release[mask].min())
+    return out
+
+
+def main(num_dags: int = 12, seed: int = 0, window_s: float = 900.0):
+    # Heavily contended regime, like the production Alibaba cluster (4M jobs
+    # on 4034 machines): burst submissions against tight capacity — this is
+    # where coordinated packing pays (under light load, default Airflow is
+    # already near-optimal on completion time and AGORA mostly cuts cost).
+    cluster = alibaba_cluster(machines=2)
+    dags = synth_trace(num_dags, cluster, seed=seed, submit_rate=1.0 / 3.0)
+    t0 = time.monotonic()
+
+    base_cost = agora_cost = 0.0
+    base_done = {}
+    agora_done = {}
+    # 15-minute scheduling windows over submissions (§5.5.1 trigger)
+    windows = {}
+    for d in dags:
+        windows.setdefault(int(d.release_time // window_s), []).append(d)
+    for wi in sorted(windows):
+        batch = windows[wi]
+        prob = flatten(batch, cluster.num_resources)
+        af = airflow_plan(prob, cluster)
+        cfg = AnnealConfig(seed=seed, min_iters=300,
+                           max_iters=min(1200, 60 * prob.num_tasks),
+                           patience=200)
+        sol = anneal(prob, cluster, Goal.balanced(), cfg,
+                     (af.makespan, af.cost))
+        base_cost += af.cost
+        agora_cost += sol.cost
+        base_done.update(_per_dag_completion(prob, af))
+        agora_done.update(_per_dag_completion(prob, sol))
+
+    total_base = sum(base_done.values())
+    total_agora = sum(agora_done.values())
+    imps = np.asarray([1.0 - agora_done[k] / max(base_done[k], 1e-9)
+                       for k in base_done])
+    frac_improved = float((imps > 0).mean())
+    frac_big = float((imps > 0.5).mean())
+    emit("fig11/macro", (time.monotonic() - t0) * 1e6,
+         f"dags={num_dags} cost_reduction={1 - agora_cost / base_cost:.1%} "
+         f"completion_reduction={1 - total_agora / total_base:.1%} "
+         f"dags_improved={frac_improved:.0%} dags_gt50pct={frac_big:.0%}")
+    # CDF quartiles of per-DAG improvement
+    qs = np.percentile(imps, [10, 25, 50, 75, 90])
+    emit("fig11/cdf", 0.0,
+         "p10={:.2f} p25={:.2f} p50={:.2f} p75={:.2f} p90={:.2f}".format(*qs))
+
+
+if __name__ == "__main__":
+    main()

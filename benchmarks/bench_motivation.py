@@ -1,0 +1,95 @@
+"""Paper §3 motivation: Fig. 2 (Ernest scaling curves), Fig. 3 + Table 2
+(separate vs brute-force co-optimization), Fig. 4 (search-space growth)."""
+from __future__ import annotations
+
+import itertools
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster.catalog import paper_cluster
+from repro.cluster.workloads import JOB_PROFILES, make_task, motivation_dag
+from repro.core.baselines import airflow_plan, brute_force_plan, cp_ernest_plan
+from repro.core.dag import DAG, Task, flatten
+from repro.core.annealer import reference_point
+from repro.core.objectives import Goal
+from repro.core.predictor import ErnestPredictor
+from repro.core.sgs import schedule_cost
+
+
+def ernest_curves():
+    """Fig. 2: fit Ernest on 'one prior run + probes' per job and report
+    prediction error vs the USL ground truth on held-out node counts."""
+    for job, profile in JOB_PROFILES.items():
+        t0 = time.monotonic()
+        curve = profile.curves["m5.4xlarge"]
+        train_n = [1, 2, 4, 8]
+        test_n = [3, 6, 10, 12, 16]
+        pred = ErnestPredictor.fit(train_n, curve.runtime(np.asarray(train_n)))
+        err = np.abs(pred.predict(test_n) - curve.runtime(np.asarray(test_n)))
+        rel = float(np.mean(err / curve.runtime(np.asarray(test_n))))
+        emit(f"fig2/ernest/{job}", (time.monotonic() - t0) * 1e6,
+             f"mean_rel_err={rel:.3f}")
+
+
+def separate_vs_brute(counts=(1, 2, 4, 6, 8, 9, 10, 12, 16)):
+    """Fig. 3 / Table 2: Ernest+TetriSched(separate) vs BF co-optimize on the
+    Fig. 1 DAG, m5.4xlarge option grid (Table 2 shows all-m5.4xlarge picks)."""
+    cluster = paper_cluster()
+    jobs = ["index-analysis", "sentiment-analysis", "airline-delay",
+            "movie-recommendation"]
+    tasks = [make_task(j, cluster, counts=counts) for j in jobs]
+    # restrict to m5.4xlarge options (paper Table 2 outcome)
+    for t in tasks:
+        t.options = [o for o in t.options if "m5.4xlarge" in o.label]
+        t.default_option = len(t.options) - 1
+    dag = DAG("motivation", tasks, edges=[(0, 1), (0, 2), (0, 3)])
+    prob = flatten([dag], cluster.num_resources)
+    ref = reference_point(prob, cluster)
+
+    t0 = time.monotonic()
+    sep = cp_ernest_plan(prob, cluster, "runtime")
+    t_sep = time.monotonic() - t0
+    t0 = time.monotonic()
+    bf = brute_force_plan(prob, cluster, Goal.runtime(), ref)
+    t_bf = time.monotonic() - t0
+    imp_m = (sep.makespan - bf.makespan) / sep.makespan
+    imp_c = (sep.cost - bf.cost) / sep.cost
+    emit("fig3/separate", t_sep * 1e6,
+         f"M={sep.makespan:.0f}s C=${sep.cost:.2f} "
+         f"cfg={[t.options[o].label for t, o in zip(prob.tasks, sep.option_idx)]}")
+    emit("fig3/bf_cooptimize", t_bf * 1e6,
+         f"M={bf.makespan:.0f}s C=${bf.cost:.2f} "
+         f"runtime_improvement={imp_m:.1%} cost_improvement={imp_c:.1%} "
+         f"cfg={[t.options[o].label for t, o in zip(prob.tasks, bf.option_idx)]}")
+
+
+def search_space():
+    """Fig. 4: search space |options|^J and measured BF solve time growth."""
+    cluster = paper_cluster()
+    for J in (1, 2, 3, 4):
+        jobs = ["index-analysis", "sentiment-analysis", "airline-delay",
+                "movie-recommendation"][:J]
+        tasks = [make_task(j, cluster, counts=(1, 2, 4, 8, 16)) for j in jobs]
+        for t in tasks:
+            t.options = [o for o in t.options if "m5.4xlarge" in o.label]
+        dag = DAG("m", tasks, edges=[(0, k) for k in range(1, J)])
+        prob = flatten([dag], cluster.num_resources)
+        ref = reference_point(prob, cluster)
+        space = np.prod([len(t.options) for t in tasks]) * math.factorial(J)
+        t0 = time.monotonic()
+        brute_force_plan(prob, cluster, Goal.runtime(), ref)
+        emit(f"fig4/bf_J{J}", (time.monotonic() - t0) * 1e6,
+             f"search_space={int(space)}")
+
+
+def main():
+    ernest_curves()
+    separate_vs_brute()
+    search_space()
+
+
+if __name__ == "__main__":
+    main()

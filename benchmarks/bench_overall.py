@@ -1,0 +1,51 @@
+"""Fig. 7: end-to-end runtime and cost of DAG1/DAG2 under default Airflow,
+AGORA, CP+Ernest, MILP+Ernest, Stratus for goals balanced/runtime/cost."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.cluster.catalog import paper_cluster
+from repro.cluster.workloads import dag1, dag2
+from repro.core import baselines as bl
+from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.dag import flatten
+from repro.core.objectives import Goal
+from repro.core.sgs import validate_schedule
+
+GOALS = {"balanced": Goal.balanced(), "runtime": Goal.runtime(),
+         "cost": Goal.cost()}
+
+
+def main(seed: int = 1):
+    cluster = paper_cluster()
+    for dag_fn in (dag1, dag2):
+        d = dag_fn(cluster)
+        prob = flatten([d], cluster.num_resources)
+        ref = reference_point(prob, cluster)
+        af = bl.airflow_plan(prob, cluster)
+        for gname, goal in GOALS.items():
+            plans = {
+                "airflow": af,
+                "cp+ernest": bl.cp_ernest_plan(prob, cluster, gname),
+                "milp+ernest": bl.milp_ernest_plan(prob, cluster, gname),
+                "stratus": bl.stratus_plan(prob, cluster),
+            }
+            t0 = time.monotonic()
+            plans["agora"] = anneal(prob, cluster, goal,
+                                    AnnealConfig(seed=seed), ref)
+            t_agora = time.monotonic() - t0
+            for name, sol in plans.items():
+                errs = validate_schedule(prob, sol.option_idx, sol.start,
+                                         sol.finish, cluster.caps)
+                assert not errs, (name, errs)
+                us = t_agora * 1e6 if name == "agora" else sol.solve_seconds * 1e6
+                imp_m = (af.makespan - sol.makespan) / af.makespan
+                imp_c = (af.cost - sol.cost) / af.cost
+                emit(f"fig7/{d.name}/{gname}/{name}", us,
+                     f"M={sol.makespan:.0f}s C=${sol.cost:.2f} "
+                     f"dM_vs_airflow={imp_m:.1%} dC_vs_airflow={imp_c:.1%}")
+
+
+if __name__ == "__main__":
+    main()

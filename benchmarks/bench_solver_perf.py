@@ -1,0 +1,71 @@
+"""§5.4 future work, delivered: solver parallelization. Measures solver
+throughput (schedule evaluations / second) and solution quality at a fixed
+wall-clock budget for:
+
+  * paper-faithful serial SA + exact/SGS inner solver (host)
+  * JAX-vectorized batched SA (grid SGS decoder, vmapped chains)
+  * Ising-form penalized annealer (jnp reference path)
+  * Ising-form with the Pallas sched_energy kernel (interpret on CPU; the
+    TPU-compiled path is exercised in the dry-run)
+
+Wall-clock numbers are CPU-host measurements — the honest comparison for
+this container; TPU projections live in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster.catalog import paper_cluster
+from repro.cluster.workloads import dag1
+from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.dag import flatten
+from repro.core.ising import IsingConfig, ising_anneal
+from repro.core.objectives import Goal
+from repro.core.vectorized import VecConfig, vectorized_anneal
+
+
+def main(seed: int = 0):
+    cluster = paper_cluster()
+    prob = flatten([dag1(cluster)], cluster.num_resources)
+    ref = reference_point(prob, cluster)
+    goal = Goal.balanced()
+
+    cfg = AnnealConfig(seed=seed, min_iters=1500, max_iters=1500,
+                       patience=10_000)
+    t0 = time.monotonic()
+    host = anneal(prob, cluster, goal, cfg, ref)
+    t_host = time.monotonic() - t0
+    evals = 1500
+    emit("solver/serial-host", t_host * 1e6,
+         f"evals_per_s={evals / t_host:.0f} energy={host.energy:.3f}")
+
+    vc = VecConfig(chains=256, iters=300, seed=seed)
+    t0 = time.monotonic()
+    vec = vectorized_anneal(prob, cluster, goal, vc, ref)
+    t_vec = time.monotonic() - t0
+    emit("solver/vectorized-jax", t_vec * 1e6,
+         f"evals_per_s={vc.chains * vc.iters / t_vec:.0f} "
+         f"energy={vec.energy:.3f}")
+
+    ic = IsingConfig(chains=512, iters=1000, seed=seed, use_pallas=False)
+    t0 = time.monotonic()
+    isn = ising_anneal(prob, cluster, goal, ic, ref)
+    t_isn = time.monotonic() - t0
+    emit("solver/ising-jnp", t_isn * 1e6,
+         f"evals_per_s={ic.chains * ic.iters / t_isn:.0f} "
+         f"energy={isn.energy:.3f}")
+
+    icp = IsingConfig(chains=64, iters=100, seed=seed, use_pallas=True)
+    t0 = time.monotonic()
+    isp = ising_anneal(prob, cluster, goal, icp, ref)
+    t_isp = time.monotonic() - t0
+    emit("solver/ising-pallas-interpret", t_isp * 1e6,
+         f"evals_per_s={icp.chains * icp.iters / t_isp:.0f} "
+         f"energy={isp.energy:.3f} (interpret mode: correctness, not speed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: CSV rows `name,us_per_call,derived`."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@contextmanager
+def timed(name: str, derived_fn=lambda: ""):
+    t0 = time.monotonic()
+    yield
+    emit(name, (time.monotonic() - t0) * 1e6, derived_fn())
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONL artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report_roofline [results_dir]
+"""
+import json
+import os
+import sys
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path)]
+
+
+def compile_table(recs):
+    print("| arch | shape | mesh | status | compile (s) | peak bytes/dev |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        peak = r.get("memory", {}).get("peak_bytes")
+        peak_s = f"{peak/1e9:.2f} GB" if peak else "-"
+        extra = r.get("reason", "") if r["status"] == "skip" else ""
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']}"
+              f"{(' ('+extra+')') if extra else ''} | {r.get('compile_s','-')} |"
+              f" {peak_s} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | t_comp (ms) | t_mem_hlo (ms) | t_mem_est (ms) |"
+          " t_coll (ms) | dominant* | useful | roofline* |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | skip: {r.get('reason','')} |"
+                  + " - |" * 6)
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} |"
+              f" {r['t_memory']*1e3:.1f} | {r.get('t_memory_est',0)*1e3:.1f} |"
+              f" {r['t_collective']*1e3:.1f} | {r.get('dominant_est','-')} |"
+              f" {r['useful_ratio']:.2f} |"
+              f" {r.get('roofline_fraction_est',0)*100:.1f}% |")
+
+
+def perf_table(recs):
+    print("| cell | variant | t_comp (ms) | t_coll (ms) | useful |"
+          " roofline* | verdict |")
+    print("|---|---|---|---|---|---|---|")
+    best = {}
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        cell = f"{r['arch']} x {r['shape']}"
+        roof = r.get("roofline_fraction_est", 0) * 100
+        prev = best.get(cell)
+        verdict = "baseline" if r["variant"] == "baseline" else (
+            "confirmed" if prev is not None and roof > prev + 0.05 else "refuted/neutral")
+        best[cell] = max(prev or 0, roof)
+        print(f"| {cell} | {r['variant']} | {r['t_compute']*1e3:.0f} |"
+              f" {r['t_collective']*1e3:.0f} | {r['useful_ratio']:.2f} |"
+              f" {roof:.1f}% | {verdict} |")
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results"
+    print("## Dry-run (compile) results\n")
+    compile_table(load(os.path.join(d, "dryrun_compile.jsonl")))
+    print("\n## Roofline (40-cell baseline)\n")
+    roofline_table(load(os.path.join(d, "dryrun_roofline_cal.jsonl"))
+                   or load(os.path.join(d, "dryrun_roofline.jsonl")))
+    print("\n## Perf iterations\n")
+    perf_table(load(os.path.join(d, "perf_iterations.jsonl")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Checkpointing: npz shards + JSON manifest, async background saves, exact
+resume (params, optimizer state, data-pipeline state, RNG). Atomic renames
+make partially-written checkpoints invisible; ``latest_step`` scans the
+directory so restart-after-kill needs no bookkeeping.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't round-trip bf16:
+            arr = arr.astype(np.float32)  # lossless upcast, cast back on load
+        out[key] = arr
+    return out
+
+
+def _unflatten(template, arrays: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = arrays[key]
+        if hasattr(leaf, "dtype"):
+            import jax.numpy as jnp
+            arr = jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def save(self, step: int, trees: Dict[str, Any],
+             extra: Optional[Dict[str, Any]] = None, blocking: bool = True):
+        """trees: name -> pytree (e.g. {'params':…, 'opt':…}). extra: JSON-able."""
+        host_trees = {name: _flatten(jax.device_get(t))
+                      for name, t in trees.items()}
+
+        def _write():
+            with self._lock:
+                final = self._step_dir(step)
+                tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+                try:
+                    for name, arrays in host_trees.items():
+                        np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
+                    manifest = {"step": step, "trees": list(host_trees),
+                                "extra": extra or {}}
+                    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                        json.dump(manifest, f)
+                    if os.path.exists(final):
+                        shutil.rmtree(final)
+                    os.rename(tmp, final)
+                finally:
+                    if os.path.exists(tmp):
+                        shutil.rmtree(tmp, ignore_errors=True)
+                self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, templates: Dict[str, Any],
+                step: Optional[int] = None) -> Tuple[int, Dict[str, Any], Dict]:
+        """Returns (step, trees, extra). templates give pytree structure."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, f"no checkpoint in {self.dir}"
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        trees = {}
+        for name, template in templates.items():
+            with np.load(os.path.join(d, f"{name}.npz")) as z:
+                arrays = {k: z[k] for k in z.files}
+            trees[name] = _unflatten(template, arrays)
+        return step, trees, manifest.get("extra", {})

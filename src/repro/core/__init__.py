@@ -1,0 +1,1 @@
+"""AGORA core: the paper's contribution as a composable JAX module."""

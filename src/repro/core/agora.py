@@ -1,0 +1,146 @@
+"""AGORA front-door: plan one or more DAGs against a heterogeneous cluster.
+
+Mirrors the system architecture of Fig. 5: the Predictor has already turned
+event logs into per-task option grids (``Task.options``); ``Agora.plan``
+co-optimizes configurations + schedule with the selected solver and returns a
+``Plan`` the flow executor can run. ``replan`` supports the multi-DAG /
+elastic triggers of §5.5.1 (new submissions every 15 min or queue pressure,
+node loss, straggler re-estimation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.catalog import Cluster
+from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.dag import DAG, FlatProblem, flatten
+from repro.core.objectives import Goal, Solution
+from repro.core.sgs import validate_schedule
+from repro.core.vectorized import VecConfig, vectorized_anneal
+
+
+@dataclasses.dataclass
+class Plan:
+    problem: FlatProblem
+    solution: Solution
+    goal: Goal
+    cluster: Cluster
+    reference: Tuple[float, float]
+
+    @property
+    def makespan(self) -> float:
+        return self.solution.makespan
+
+    @property
+    def cost(self) -> float:
+        return self.solution.cost
+
+    def config_labels(self) -> List[str]:
+        return [t.options[self.solution.option_idx[j]].label
+                for j, t in enumerate(self.problem.tasks)]
+
+    def validate(self) -> List[str]:
+        return validate_schedule(self.problem, self.solution.option_idx,
+                                 self.solution.start, self.solution.finish,
+                                 self.cluster.caps)
+
+    def per_dag_completion(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for di, name in enumerate(self.problem.dag_names):
+            mask = self.problem.dag_of == di
+            out[name] = float(self.solution.finish[mask].max()
+                              - self.problem.release[mask].min())
+        return out
+
+
+class Agora:
+    def __init__(self, cluster: Cluster, goal: Goal = Goal.balanced(),
+                 solver: str = "anneal",
+                 anneal_cfg: Optional[AnnealConfig] = None,
+                 vec_cfg: Optional[VecConfig] = None,
+                 mesh=None):
+        assert solver in ("anneal", "vectorized", "ising")
+        self.cluster = cluster
+        self.goal = goal
+        self.solver = solver
+        self.anneal_cfg = anneal_cfg or AnnealConfig()
+        self.vec_cfg = vec_cfg or VecConfig()
+        self.mesh = mesh
+
+    def plan(self, dags: Sequence[DAG],
+             ref: Optional[Tuple[float, float]] = None) -> Plan:
+        problem = flatten(list(dags), self.cluster.num_resources)
+        if ref is None:
+            ref = reference_point(problem, self.cluster)
+        if self.solver == "anneal":
+            sol = anneal(problem, self.cluster, self.goal, self.anneal_cfg, ref)
+        elif self.solver == "vectorized":
+            sol = vectorized_anneal(problem, self.cluster, self.goal,
+                                    self.vec_cfg, ref, mesh=self.mesh)
+        else:
+            from repro.core.ising import ising_anneal
+            sol = ising_anneal(problem, self.cluster, self.goal, ref=ref)
+        return Plan(problem, sol, self.goal, self.cluster, ref)
+
+    def replan(self, plan: Plan, *, now: float,
+               done: Sequence[int] = (),
+               running: Sequence[Tuple[int, float]] = (),
+               new_dags: Sequence[DAG] = (),
+               cluster: Optional[Cluster] = None,
+               duration_scale: Optional[Dict[int, float]] = None) -> Plan:
+        """Re-solve the remainder: completed tasks dropped, running tasks
+        pinned as zero-duration predecessors-done, durations re-scaled for
+        observed stragglers, optionally on a resized cluster (elastic)."""
+        cluster = cluster or self.cluster
+        old = plan.problem
+        keep = [j for j in range(old.num_tasks) if j not in set(done)]
+        remap = {j: i for i, j in enumerate(keep)}
+        tasks = []
+        for j in keep:
+            t = old.tasks[j]
+            if duration_scale and j in duration_scale:
+                s = duration_scale[j]
+                t = dataclasses.replace(t, options=[
+                    dataclasses.replace(o, duration=o.duration * s,
+                                        cost=o.cost * s) for o in t.options])
+            tasks.append(t)
+        edges = [(remap[a], remap[b]) for a, b in old.edges
+                 if a in remap and b in remap]
+        release = np.maximum(old.release[keep], now)
+        # pin running tasks: single option = remaining duration at current cfg
+        run_map = dict(running)
+        for j, rem in run_map.items():
+            if j in remap:
+                i = remap[j]
+                opt = old.tasks[j].options[plan.solution.option_idx[j]]
+                tasks[i] = dataclasses.replace(
+                    tasks[i], options=[dataclasses.replace(
+                        opt, duration=max(rem, 1e-6))], default_option=0)
+                release[i] = now
+        prob = FlatProblem(tasks, edges, old.dag_of[keep],
+                           old.dag_names, release, cluster.num_resources)
+        for d in new_dags:
+            extra = flatten([d], cluster.num_resources)
+            base = prob.num_tasks
+            prob.tasks.extend(extra.tasks)
+            prob.edges.extend((a + base, b + base) for a, b in extra.edges)
+            prob.dag_of = np.concatenate([prob.dag_of,
+                                          extra.dag_of + len(prob.dag_names)])
+            prob.dag_names.extend(extra.dag_names)
+            prob.release = np.concatenate(
+                [prob.release, np.maximum(extra.release, now)])
+        agora2 = Agora(cluster, self.goal, self.solver, self.anneal_cfg,
+                       self.vec_cfg, self.mesh)
+        ref = reference_point(prob, cluster)
+        if self.solver == "anneal":
+            sol = anneal(prob, cluster, self.goal, self.anneal_cfg, ref)
+        else:
+            sol = vectorized_anneal(prob, cluster, self.goal, self.vec_cfg,
+                                    ref, mesh=self.mesh)
+        del agora2
+        return Plan(prob, sol, self.goal, cluster, ref)

@@ -1,0 +1,152 @@
+"""DAG workload representation (paper §4.2 inputs).
+
+A ``Task`` carries a list of candidate ``TaskOption``s — the per-task
+configuration axis c that AGORA co-optimizes: each option fixes an instance
+type, an instance count (and, for Spark-like jobs, app parameters folded into
+the profile), yielding a (duration, demand-vector, cost) triple.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskOption:
+    """One resource configuration c for a task."""
+    label: str                     # e.g. "9 x m5.4xlarge"
+    duration: float                # predicted runtime (s)
+    demands: Tuple[float, ...]     # per cluster resource m
+    cost: float                    # duration * sum_m demands_m * price_m
+
+    def as_tuple(self):
+        return (self.duration, self.demands, self.cost)
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    options: List[TaskOption]
+    default_option: int = 0        # the user/prior-run configuration
+
+
+@dataclasses.dataclass
+class DAG:
+    name: str
+    tasks: List[Task]
+    edges: List[Tuple[int, int]]   # (pred, succ) indices into tasks
+    release_time: float = 0.0      # submission time (multi-DAG / trace mode)
+
+    def __post_init__(self):
+        n = len(self.tasks)
+        for a, b in self.edges:
+            assert 0 <= a < n and 0 <= b < n and a != b, (a, b, n)
+
+    @property
+    def num_tasks(self) -> int:
+        return len(self.tasks)
+
+    def preds(self) -> List[List[int]]:
+        p: List[List[int]] = [[] for _ in self.tasks]
+        for a, b in self.edges:
+            p[b].append(a)
+        return p
+
+    def succs(self) -> List[List[int]]:
+        s: List[List[int]] = [[] for _ in self.tasks]
+        for a, b in self.edges:
+            s[a].append(b)
+        return s
+
+    def topo_order(self) -> List[int]:
+        preds = self.preds()
+        indeg = [len(p) for p in preds]
+        succs = self.succs()
+        ready = [i for i, d in enumerate(indeg) if d == 0]
+        out: List[int] = []
+        while ready:
+            i = ready.pop(0)
+            out.append(i)
+            for j in succs[i]:
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    ready.append(j)
+        assert len(out) == len(self.tasks), "cycle in DAG"
+        return out
+
+    def critical_path_lengths(self, durations: Sequence[float]) -> np.ndarray:
+        """Longest path from each task to a sink, inclusive of own duration."""
+        order = self.topo_order()
+        succs = self.succs()
+        cp = np.zeros(len(self.tasks))
+        for i in reversed(order):
+            tail = max((cp[j] for j in succs[i]), default=0.0)
+            cp[i] = durations[i] + tail
+        return cp
+
+    def downstream_counts(self) -> np.ndarray:
+        """Airflow priority weight: number of (transitive) descendants."""
+        order = self.topo_order()
+        succs = self.succs()
+        desc = [set() for _ in self.tasks]
+        for i in reversed(order):
+            for j in succs[i]:
+                desc[i].add(j)
+                desc[i] |= desc[j]
+        return np.asarray([len(d) for d in desc])
+
+
+@dataclasses.dataclass
+class FlatProblem:
+    """One or more DAGs flattened into a single RCPSP instance."""
+    tasks: List[Task]
+    edges: List[Tuple[int, int]]
+    dag_of: np.ndarray              # task -> source dag index
+    dag_names: List[str]
+    release: np.ndarray             # per-task release time (from DAG submission)
+    num_resources: int
+
+    @property
+    def num_tasks(self) -> int:
+        return len(self.tasks)
+
+    def as_dag(self) -> DAG:
+        return DAG("flat", self.tasks, list(self.edges))
+
+    def option_arrays(self):
+        """Pad per-task options to rectangular arrays.
+
+        Returns (durations (J,O), demands (J,O,M), costs (J,O), n_opts (J,)).
+        Padded slots repeat the last real option."""
+        J = self.num_tasks
+        O = max(len(t.options) for t in self.tasks)
+        M = self.num_resources
+        dur = np.zeros((J, O))
+        dem = np.zeros((J, O, M))
+        cost = np.zeros((J, O))
+        n = np.zeros(J, np.int64)
+        for j, t in enumerate(self.tasks):
+            n[j] = len(t.options)
+            for o in range(O):
+                opt = t.options[min(o, len(t.options) - 1)]
+                dur[j, o] = opt.duration
+                dem[j, o] = opt.demands
+                cost[j, o] = opt.cost
+        return dur, dem, cost, n
+
+
+def flatten(dags: Sequence[DAG], num_resources: int) -> FlatProblem:
+    tasks: List[Task] = []
+    edges: List[Tuple[int, int]] = []
+    dag_of: List[int] = []
+    release: List[float] = []
+    for di, d in enumerate(dags):
+        base = len(tasks)
+        tasks.extend(d.tasks)
+        edges.extend((a + base, b + base) for a, b in d.edges)
+        dag_of.extend([di] * d.num_tasks)
+        release.extend([d.release_time] * d.num_tasks)
+    return FlatProblem(tasks, edges, np.asarray(dag_of), [d.name for d in dags],
+                       np.asarray(release), num_resources)

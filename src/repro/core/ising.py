@@ -1,0 +1,170 @@
+"""Direct penalized-energy annealer ("Ising-form" solver).
+
+The paper (§5.4) observes that the SAT/scheduling formulation maps onto
+emerging annealing hardware [13]. This solver is that formulation on the
+TPU: the state is the raw (configuration, start-time) assignment; precedence
+and capacity constraints enter as penalty terms; the batched energy is
+evaluated by the ``sched_energy`` Pallas kernel (mask-matmul on the MXU).
+No serial schedule construction anywhere in the hot loop — every move of
+every chain is evaluated in parallel.
+
+The best chain is repaired to an exactly-feasible schedule on the host
+(start-time order becomes an SGS priority), so reported numbers are always
+feasible-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.catalog import Cluster
+from repro.core.dag import FlatProblem
+from repro.core.objectives import Goal, Solution
+from repro.core.sgs import schedule_cost, sgs_schedule
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class IsingConfig:
+    chains: int = 512
+    iters: int = 1500
+    grid: int = 256
+    t0: float = 1.0
+    cooling: float = 0.997
+    seed: int = 0
+    horizon_slack: float = 1.6
+    lam_cap: float = 50.0
+    lam_prec: float = 50.0
+    use_pallas: bool = False        # True on TPU; interpret-validated on CPU
+
+
+@partial(jax.jit, static_argnames=("T", "iters", "use_pallas", "lam_cap",
+                                   "lam_prec"))
+def _ising_scan(dur_bins, demands, costs, n_opts, pred_pairs, release, caps,
+                goal_w, ref_M, ref_C, opt0, start0, key, t0, cooling, *,
+                T: int, iters: int, use_pallas: bool,
+                lam_cap: float, lam_prec: float):
+    B, J = opt0.shape
+
+    # demands provided as (J, O, M); gather to (B, M, J)
+    def gather(opt):
+        d = dur_bins[jnp.arange(J)[None, :], opt].astype(jnp.float32)        # (B, J)
+        dm = demands[jnp.arange(J)[None, :], opt]                            # (B, J, M)
+        c = costs[jnp.arange(J)[None, :], opt].sum(axis=1)                   # (B,)
+        return d, dm.transpose(0, 2, 1), c
+
+    def efun(opt, start):
+        d, dm, c = gather(opt)
+        e, mk, viol, prec = kops.schedule_objective(
+            start, d, dm, caps, c, pred_pairs, goal_w, ref_M, ref_C,
+            T=T, lam_cap=lam_cap, lam_prec=lam_prec, use_pallas=use_pallas)
+        return e
+
+    e0 = efun(opt0, start0)
+    state0 = dict(opt=opt0, start=start0, e=e0, best_opt=opt0,
+                  best_start=start0, best_e=e0, T=jnp.float32(t0))
+
+    def step(state, it):
+        k = jax.random.fold_in(key, it)
+        k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
+        bidx = jnp.arange(B)
+        j = jax.random.randint(k1, (B,), 0, J)
+        kind = jax.random.uniform(k2, (B,))
+
+        # move A: re-draw option of task j
+        new_o = jax.random.randint(k3, (B,), 0, jnp.take(n_opts, j))
+        opt = state["opt"].at[bidx, j].set(
+            jnp.where(kind < 0.35, new_o, state["opt"][bidx, j]))
+
+        # move B: snap start of j to max(pred finishes, release) (repair)
+        d, _, _ = gather(opt)
+        finish = state["start"] + d
+        is_pred = pred_pairs[None, :, 1] == j[:, None]                       # (B, E)
+        pf = jnp.max(jnp.where(is_pred, finish[:, pred_pairs[:, 0]], 0.0), axis=1)
+        snap = jnp.maximum(pf, release[j])
+        # move C: uniform re-draw of start
+        rand_t = jax.random.uniform(k4, (B,), minval=0.0, maxval=float(T - 1))
+        new_start = jnp.where(kind < 0.35, state["start"][bidx, j],
+                              jnp.where(kind < 0.75, snap, rand_t))
+        start = state["start"].at[bidx, j].set(new_start)
+
+        e = efun(opt, start)
+        dE = e - state["e"]
+        accept = (dE < 0) | (jnp.exp(-dE / jnp.maximum(state["T"], 1e-9))
+                             > jax.random.uniform(k5, (B,)))
+        opt = jnp.where(accept[:, None], opt, state["opt"])
+        start = jnp.where(accept[:, None], start, state["start"])
+        e = jnp.where(accept, e, state["e"])
+        better = e < state["best_e"]
+        return dict(
+            opt=opt, start=start, e=e,
+            best_opt=jnp.where(better[:, None], opt, state["best_opt"]),
+            best_start=jnp.where(better[:, None], start, state["best_start"]),
+            best_e=jnp.where(better, e, state["best_e"]),
+            T=state["T"] * cooling), None
+
+    state, _ = jax.lax.scan(step, state0, jnp.arange(iters))
+    return state
+
+
+def ising_anneal(problem: FlatProblem, cluster: Cluster, goal: Goal,
+                 cfg: Optional[IsingConfig] = None,
+                 ref: Optional[Tuple[float, float]] = None) -> Solution:
+    cfg = cfg or IsingConfig()
+    t_start = time.monotonic()
+    if ref is None:
+        from repro.core.annealer import reference_point
+        ref = reference_point(problem, cluster)
+    ref_M, ref_C = ref
+    J = problem.num_tasks
+    dur, dem, cost, n_opts = problem.option_arrays()
+    horizon = max(ref_M * cfg.horizon_slack, dur.max() * 2.0)
+    dt = horizon / cfg.grid
+    dur_bins = jnp.asarray(np.maximum(dur / dt, 1e-3), jnp.float32)
+    pred_pairs = (jnp.asarray(problem.edges, jnp.int32).reshape(-1, 2)
+                  if problem.edges else jnp.zeros((1, 2), jnp.int32))
+    release = jnp.asarray(np.ceil(problem.release / dt), jnp.float32)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B = cfg.chains
+    defaults = jnp.asarray([t.default_option for t in problem.tasks], jnp.int32)
+    opt0 = jnp.broadcast_to(defaults, (B, J)).copy()
+    rnd = jax.random.randint(k1, (B, J), 0, 1_000_000) % jnp.asarray(n_opts, jnp.int32)
+    opt0 = jnp.where((jnp.arange(B) % 2 == 0)[:, None], opt0, rnd)
+    # start init: topological prefix sums (roughly serialized) + noise
+    topo = problem.as_dag().topo_order()
+    s0 = np.zeros(J, np.float32)
+    for i in topo:
+        preds = [a for a, b in problem.edges if b == i]
+        s0[i] = max([s0[a] + float(dur_bins[a, problem.tasks[a].default_option])
+                     for a in preds] + [float(release[i])])
+    start0 = jnp.broadcast_to(jnp.asarray(s0), (B, J)) \
+        + jax.random.uniform(k2, (B, J)) * 3.0
+
+    state = _ising_scan(
+        dur_bins, jnp.asarray(dem, jnp.float32), jnp.asarray(cost, jnp.float32),
+        jnp.asarray(n_opts, jnp.int32), pred_pairs, release,
+        jnp.asarray(cluster.caps, jnp.float32),
+        goal.w, ref_M / dt, ref_C, opt0, start0, k3, cfg.t0, cfg.cooling,
+        T=cfg.grid, iters=cfg.iters, use_pallas=cfg.use_pallas,
+        lam_cap=cfg.lam_cap, lam_prec=cfg.lam_prec)
+
+    b = int(jnp.argmin(state["best_e"]))
+    best_opt = np.asarray(state["best_opt"][b], np.int64)
+    best_start = np.asarray(state["best_start"][b], np.float64)
+    # host repair: start-time order -> SGS priority (earlier = higher)
+    start, finish = sgs_schedule(problem, best_opt, priority=-best_start,
+                                 caps=cluster.caps)
+    mk = float(finish.max())
+    cst = schedule_cost(problem, best_opt, cluster.prices_per_sec)
+    sol = Solution(best_opt, start, finish, mk, cst,
+                   goal.energy(mk, cst, ref_M, ref_C), solver="agora-ising")
+    sol.solve_seconds = time.monotonic() - t_start
+    return sol

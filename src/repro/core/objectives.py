@@ -1,0 +1,54 @@
+"""Optimization goal (paper Eq. 1, 7, 8).
+
+energy = w * (M_opt - M)/M + (1 - w) * (C_opt - C)/C
+with user budgets on makespan and cost (infinity when unset).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Goal:
+    w: float = 0.5                      # makespan weight (1=runtime, 0=cost)
+    makespan_budget: float = math.inf   # Eq. 7
+    cost_budget: float = math.inf       # Eq. 8
+
+    @classmethod
+    def runtime(cls) -> "Goal":
+        return cls(w=1.0)
+
+    @classmethod
+    def cost(cls) -> "Goal":
+        return cls(w=0.0)
+
+    @classmethod
+    def balanced(cls) -> "Goal":
+        return cls(w=0.5)
+
+    def energy(self, makespan: float, cost: float,
+               ref_makespan: float, ref_cost: float) -> float:
+        e = (self.w * (makespan - ref_makespan) / max(ref_makespan, 1e-12)
+             + (1.0 - self.w) * (cost - ref_cost) / max(ref_cost, 1e-12))
+        if makespan > self.makespan_budget or cost > self.cost_budget:
+            return math.inf
+        return e
+
+
+@dataclasses.dataclass
+class Solution:
+    """A concrete plan: configuration choice + start times for every task."""
+    option_idx: "np.ndarray"     # (J,) chosen option per task
+    start: "np.ndarray"          # (J,)
+    finish: "np.ndarray"         # (J,)
+    makespan: float
+    cost: float
+    energy: float = math.nan
+    solver: str = ""
+    solve_seconds: float = 0.0
+    optimal_schedule: bool = False   # inner schedule proven optimal for configs
+
+
+import numpy as np  # noqa: E402  (for annotations above)

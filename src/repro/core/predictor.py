@@ -1,0 +1,206 @@
+"""Runtime predictors (paper §2.1 / §4.4).
+
+* ``ErnestPredictor`` — Ernest's feature model  t(n) = θ0 + θ1·(1/n) +
+  θ2·log(n) + θ3·n  fit with non-negative least squares. NNLS is solved with
+  projected gradient descent in JAX (no scipy dependency in the hot path).
+* ``USLCurve`` — the universal scalability law (paper Eq. 9) used for the
+  Alibaba macro benchmark: X(N) = γN / (1 + α(N−1) + βN(N−1)).
+* ``profile_options`` — the in-house Predictor: takes one prior run ("event
+  log") per task and emits the TaskOption grid over (instance type × count),
+  i.e. the configuration axis the annealer explores.
+* ``RooflinePredictor`` — TPU mode: runtime(mesh config) from the compiled
+  dry-run's three roofline terms; closes the loop with repro.roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.catalog import Cluster, InstanceType
+from repro.core.dag import TaskOption
+
+
+# ---------------------------------------------------------------------------
+# Ernest (NNLS via projected gradient, jit)
+# ---------------------------------------------------------------------------
+
+
+def _ernest_features(n: jnp.ndarray) -> jnp.ndarray:
+    n = n.astype(jnp.float32)
+    return jnp.stack([jnp.ones_like(n), 1.0 / n, jnp.log(n), n], axis=-1)
+
+
+@jax.jit
+def _nnls_pg(X, y, iters: int = 2000):
+    """min ||XΘ - y||^2 s.t. Θ >= 0, by projected gradient with 1/L step."""
+    XtX = X.T @ X
+    Xty = X.T @ y
+    L = jnp.linalg.norm(XtX, ord=2) + 1e-6
+    theta0 = jnp.maximum(Xty / (jnp.diag(XtX) + 1e-6), 0.0)
+
+    def step(theta, _):
+        grad = XtX @ theta - Xty
+        theta = jnp.maximum(theta - grad / L, 0.0)
+        return theta, None
+
+    theta, _ = jax.lax.scan(step, theta0, None, length=iters)
+    return theta
+
+
+@dataclasses.dataclass
+class ErnestPredictor:
+    theta: np.ndarray  # (4,)
+
+    @classmethod
+    def fit(cls, node_counts: Sequence[float], runtimes: Sequence[float]) -> "ErnestPredictor":
+        X = np.asarray(_ernest_features(jnp.asarray(node_counts, jnp.float32)))
+        y = np.asarray(runtimes, np.float32)
+        theta = np.asarray(_nnls_pg(jnp.asarray(X), jnp.asarray(y)))
+        return cls(theta=theta)
+
+    def predict(self, n) -> np.ndarray:
+        X = np.asarray(_ernest_features(jnp.asarray(n, jnp.float32)))
+        return X @ self.theta
+
+
+# ---------------------------------------------------------------------------
+# USL (paper Eq. 9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class USLCurve:
+    alpha: float    # contention
+    beta: float     # coherency
+    gamma: float    # concurrency
+    work: float     # total work units: runtime(N) = work / X(N)
+
+    def throughput(self, n):
+        n = np.asarray(n, np.float64)
+        return self.gamma * n / (1.0 + self.alpha * (n - 1) + self.beta * n * (n - 1))
+
+    def runtime(self, n):
+        return self.work / np.maximum(self.throughput(n), 1e-9)
+
+    @classmethod
+    def fit_gamma(cls, alpha: float, beta: float, n0: float, runtime0: float,
+                  work: float = 1.0) -> "USLCurve":
+        """Calibrate γ so that runtime(n0) == runtime0 (one prior run),
+        the macro-benchmark recipe of §5.5.1."""
+        x_over_gamma = n0 / (1.0 + alpha * (n0 - 1) + beta * n0 * (n0 - 1))
+        gamma = work / (runtime0 * x_over_gamma)
+        return cls(alpha, beta, gamma, work)
+
+
+# ---------------------------------------------------------------------------
+# Task profiles -> configuration options
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskProfile:
+    """What AGORA learns from one Spark event log (+ adaptive refinement):
+    per instance type, a scaling curve of runtime vs instance count."""
+    name: str
+    curves: Dict[str, USLCurve]           # instance-type name -> curve
+    mem_per_instance: float = 0.0         # optional second-resource demand
+
+    def runtime(self, itype: str, n: int) -> float:
+        return float(self.curves[itype].runtime(n))
+
+
+def profile_options(profile: TaskProfile, cluster: Cluster,
+                    counts: Sequence[int] = (1, 2, 4, 6, 8, 10, 12, 16),
+                    default: Optional[str] = None) -> List[TaskOption]:
+    """The Predictor output: the option grid over (type, count)."""
+    opts: List[TaskOption] = []
+    M = cluster.num_resources
+    for m, itype in enumerate(cluster.types):
+        if itype.name not in profile.curves:
+            continue
+        for n in counts:
+            if n > cluster.capacities[m]:
+                continue
+            d = profile.runtime(itype.name, n)
+            demands = [0.0] * M
+            demands[m] = float(n)
+            cost = d * n * itype.price_per_sec
+            opts.append(TaskOption(f"{n} x {itype.name}", d, tuple(demands), cost))
+    assert opts, f"no options for {profile.name}"
+    return opts
+
+
+def ernest_select(options: Sequence[TaskOption], goal: str) -> int:
+    """Separate-optimization baseline: per-task best option (paper §3/§5.1).
+    Goals: 'runtime' | 'cost' | 'balanced'."""
+    d = np.asarray([o.duration for o in options])
+    c = np.asarray([o.cost for o in options])
+    if goal == "runtime":
+        key = d + 1e-9 * c
+    elif goal == "cost":
+        key = c + 1e-9 * d
+    else:
+        key = 0.5 * d / d.min() + 0.5 * c / max(c.min(), 1e-12)
+    return int(np.argmin(key))
+
+
+# ---------------------------------------------------------------------------
+# TPU roofline predictor
+# ---------------------------------------------------------------------------
+
+# v5e per-chip constants (same as repro.roofline).
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineRecord:
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    chips: int
+
+    def runtime(self, chips: Optional[int] = None) -> float:
+        """max of the three terms; rescaling chip count keeps collective bytes
+        per chip constant (conservative weak-scaling assumption)."""
+        c = chips or self.chips
+        t_compute = self.flops / (c * PEAK_FLOPS)
+        t_mem = self.bytes_hbm / (c * HBM_BW)
+        t_coll = (self.bytes_collective / self.chips) / ICI_BW
+        return max(t_compute, t_mem, t_coll)
+
+
+class RooflinePredictor:
+    """Predict training-step runtime per (arch, mesh) from dry-run records —
+    the 'event log' of the TPU world. Populated from EXPERIMENTS §Dry-run."""
+
+    def __init__(self):
+        self._records: Dict[str, RooflineRecord] = {}
+
+    def add(self, key: str, rec: RooflineRecord):
+        self._records[key] = rec
+
+    def predict(self, key: str, chips: Optional[int] = None) -> float:
+        return self._records[key].runtime(chips)
+
+    def options_for(self, key: str, steps: int, cluster: Cluster,
+                    chip_counts: Sequence[int] = (4, 8, 16, 64, 256)) -> List[TaskOption]:
+        rec = self._records[key]
+        opts = []
+        M = cluster.num_resources
+        for m, itype in enumerate(cluster.types):
+            chips = itype.vcpus
+            if chips not in chip_counts:
+                continue
+            d = rec.runtime(chips) * steps
+            demands = [0.0] * M
+            demands[m] = 1.0
+            opts.append(TaskOption(f"1 x {itype.name}", d, tuple(demands),
+                                   d * itype.price_per_sec))
+        return opts

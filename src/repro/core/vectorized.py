@@ -1,0 +1,291 @@
+"""Beyond-paper solver: massively parallel simulated annealing in JAX.
+
+The paper's solver is a single serial SA chain around a CP-SAT call (§4.3)
+and explicitly calls out parallelization + specialized hardware as future
+work (§5.4). This module is that future work, TPU-native:
+
+* a JITtable, fixed-trip-count serial-SGS **decoder** on a quantized time
+  grid: per step, the highest-priority eligible task is placed at its
+  earliest capacity-feasible start, found with a cumulative-sum window test
+  (O(T*M), fully vectorized) — no data-dependent shapes;
+* B independent (configuration, priority) annealing chains advanced in
+  lockstep under ``vmap``;
+* optional ``shard_map`` distribution of chains over a device mesh with
+  periodic best-state migration (replica exchange) via collectives.
+
+The final incumbent is re-evaluated event-exactly on the host (sgs.py), so
+grid quantization never corrupts reported numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.cluster.catalog import Cluster
+from repro.core.dag import FlatProblem
+from repro.core.objectives import Goal, Solution
+from repro.core.sgs import schedule_cost, sgs_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class VecConfig:
+    chains: int = 256
+    iters: int = 600
+    grid: int = 256                # time bins
+    t0: float = 1.0
+    cooling: float = 0.995
+    migrate_every: int = 50        # replica-exchange period (mesh mode)
+    seed: int = 0
+    horizon_slack: float = 1.6     # grid horizon = slack * reference makespan
+    prio_sigma: float = 0.35
+
+
+# ---------------------------------------------------------------------------
+# Problem -> device arrays
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DeviceProblem:
+    dur_bins: jnp.ndarray       # (J, O) int32
+    demands: jnp.ndarray        # (J, O, M) f32
+    costs: jnp.ndarray          # (J, O) f32
+    n_opts: jnp.ndarray         # (J,) int32
+    pred_mask: jnp.ndarray      # (J, J) bool; [j, p] = p is predecessor of j
+    release_bins: jnp.ndarray   # (J,) int32
+    caps: jnp.ndarray           # (M,) f32
+    dt: float
+    T: int
+
+    @classmethod
+    def build(cls, problem: FlatProblem, cluster: Cluster, ref_makespan: float,
+              cfg: VecConfig) -> "DeviceProblem":
+        dur, dem, cost, n_opts = problem.option_arrays()
+        J = problem.num_tasks
+        horizon = max(ref_makespan * cfg.horizon_slack, dur.max() * 2.0)
+        dt = horizon / cfg.grid
+        dur_bins = np.maximum(np.ceil(dur / dt).astype(np.int32), 1)
+        pred = np.zeros((J, J), bool)
+        for a, b in problem.edges:
+            pred[b, a] = True
+        return cls(
+            dur_bins=jnp.asarray(dur_bins),
+            demands=jnp.asarray(dem, jnp.float32),
+            costs=jnp.asarray(cost, jnp.float32),
+            n_opts=jnp.asarray(n_opts, jnp.int32),
+            pred_mask=jnp.asarray(pred),
+            release_bins=jnp.asarray(np.ceil(problem.release / dt), jnp.int32),
+            caps=jnp.asarray(cluster.caps, jnp.float32),
+            dt=dt, T=cfg.grid,
+        )
+
+
+# ---------------------------------------------------------------------------
+# JITtable grid SGS decoder
+# ---------------------------------------------------------------------------
+
+
+def decode_schedule(dp: DeviceProblem, option_idx, priority):
+    """option_idx (J,) int32, priority (J,) f32 -> (start (J,), makespan,
+    cost, infeasible_count). Fixed trip count J; O(J*(T*M + J))."""
+    J = dp.dur_bins.shape[0]
+    T = dp.T
+    tgrid = jnp.arange(T, dtype=jnp.int32)
+    dur = jnp.take_along_axis(dp.dur_bins, option_idx[:, None], 1)[:, 0]      # (J,)
+    dem = jnp.take_along_axis(
+        dp.demands, option_idx[:, None, None], 1)[:, 0]                        # (J, M)
+    cost = jnp.take_along_axis(dp.costs, option_idx[:, None], 1)[:, 0].sum()
+
+    def step(carry, _):
+        usage, finish, scheduled, infeas = carry
+        eligible = (~scheduled) & jnp.all(
+            (~dp.pred_mask) | scheduled[None, :], axis=1)
+        score = jnp.where(eligible, priority, -jnp.inf)
+        j = jnp.argmax(score)
+        d = dur[j]
+        r = dem[j]
+        ready = jnp.maximum(
+            dp.release_bins[j],
+            jnp.max(jnp.where(dp.pred_mask[j], finish, 0)))
+        bad = jnp.any(usage + r[None, :] > dp.caps[None, :] + 1e-6, axis=1)   # (T,)
+        cs = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(bad.astype(jnp.int32))])             # (T+1,)
+        win_bad = cs[jnp.minimum(tgrid + d, T)] - cs[tgrid]
+        ok = (win_bad == 0) & (tgrid >= ready) & (tgrid + d <= T)
+        any_ok = jnp.any(ok)
+        t_star = jnp.where(any_ok, jnp.argmax(ok), jnp.maximum(ready, T - d))
+        window = (tgrid >= t_star) & (tgrid < t_star + d)
+        usage = usage + window[:, None].astype(jnp.float32) * r[None, :]
+        finish = finish.at[j].set(t_star + d)
+        scheduled = scheduled.at[j].set(True)
+        infeas = infeas + (~any_ok).astype(jnp.int32)
+        return (usage, finish, scheduled, infeas), (j, t_star)
+
+    M = dp.caps.shape[0]
+    init = (jnp.zeros((T, M), jnp.float32), jnp.zeros(J, jnp.int32),
+            jnp.zeros(J, bool), jnp.int32(0))
+    (usage, finish, _, infeas), (order, starts) = jax.lax.scan(
+        step, init, None, length=J)
+    start = jnp.zeros(J, jnp.int32).at[order].set(starts)
+    makespan = jnp.max(finish).astype(jnp.float32) * dp.dt
+    return start, makespan, cost, infeas
+
+
+def chain_energy(dp: DeviceProblem, goal_w, ref_M, ref_C, option_idx, priority):
+    _, mk, cost, infeas = decode_schedule(dp, option_idx, priority)
+    e = (goal_w * (mk - ref_M) / ref_M
+         + (1.0 - goal_w) * (cost - ref_C) / ref_C)
+    return e + 100.0 * infeas.astype(jnp.float32), mk, cost
+
+
+# ---------------------------------------------------------------------------
+# Batched SA
+# ---------------------------------------------------------------------------
+
+
+def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, cfg: VecConfig,
+             opt0, prio0, key, axis_name: Optional[str] = None):
+    """Run cfg.iters SA steps over a batch of chains (leading axis B)."""
+    B, J = opt0.shape
+    energy_fn = jax.vmap(partial(chain_energy, dp, goal_w, ref_M, ref_C))
+
+    e0, mk0, c0 = energy_fn(opt0, prio0)
+    state0 = dict(opt=opt0, prio=prio0, e=e0,
+                  best_opt=opt0, best_prio=prio0, best_e=e0,
+                  T=jnp.float32(cfg.t0))
+
+    def step(state, it):
+        k = jax.random.fold_in(key, it)
+        k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
+        # propose: mutate one task's option; jitter one task's priority
+        j_opt = jax.random.randint(k1, (B,), 0, J)
+        new_o = jax.random.randint(
+            k2, (B,), 0, jnp.take(dp.n_opts, j_opt))
+        opt = state["opt"].at[jnp.arange(B), j_opt].set(new_o)
+        j_pr = jax.random.randint(k3, (B,), 0, J)
+        jitter = jax.random.normal(k4, (B,)) * cfg.prio_sigma
+        prio = state["prio"].at[jnp.arange(B), j_pr].add(jitter)
+
+        e, mk, c = energy_fn(opt, prio)
+        dE = e - state["e"]
+        accept = (dE < 0) | (jnp.exp(-dE / jnp.maximum(state["T"], 1e-9))
+                             > jax.random.uniform(k5, (B,)))
+        opt = jnp.where(accept[:, None], opt, state["opt"])
+        prio = jnp.where(accept[:, None], prio, state["prio"])
+        e = jnp.where(accept, e, state["e"])
+
+        better = e < state["best_e"]
+        best_opt = jnp.where(better[:, None], opt, state["best_opt"])
+        best_prio = jnp.where(better[:, None], prio, state["best_prio"])
+        best_e = jnp.where(better, e, state["best_e"])
+
+        # replica exchange: every migrate_every iters, the globally best chain
+        # replaces each batch's worst chain (and across devices if axis_name).
+        def migrate(args):
+            opt, prio, e, best_opt, best_prio, best_e = args
+            src = jnp.argmin(best_e)
+            b_opt, b_prio, b_e = best_opt[src], best_prio[src], best_e[src]
+            if axis_name is not None:
+                all_e = jax.lax.all_gather(b_e, axis_name)
+                all_o = jax.lax.all_gather(b_opt, axis_name)
+                all_p = jax.lax.all_gather(b_prio, axis_name)
+                g = jnp.argmin(all_e)
+                b_opt, b_prio, b_e = all_o[g], all_p[g], all_e[g]
+            dst = jnp.argmax(e)
+            return (opt.at[dst].set(b_opt), prio.at[dst].set(b_prio),
+                    e.at[dst].set(b_e), best_opt, best_prio, best_e)
+
+        do_mig = (it % cfg.migrate_every) == (cfg.migrate_every - 1)
+        opt, prio, e, best_opt, best_prio, best_e = jax.lax.cond(
+            do_mig, migrate, lambda a: a,
+            (opt, prio, e, best_opt, best_prio, best_e))
+
+        return dict(opt=opt, prio=prio, e=e, best_opt=best_opt,
+                    best_prio=best_prio, best_e=best_e,
+                    T=state["T"] * cfg.cooling), None
+
+    state, _ = jax.lax.scan(step, state0, jnp.arange(cfg.iters))
+    return state
+
+
+@partial(jax.jit, static_argnames=("cfg", "dp_static"))
+def _run_sa_jit(dp_arrays, dp_static, goal_w, ref_M, ref_C, cfg, opt0, prio0, key):
+    dp = DeviceProblem(*dp_arrays, *dp_static)
+    return _sa_scan(dp, goal_w, ref_M, ref_C, cfg, opt0, prio0, key)
+
+
+def vectorized_anneal(problem: FlatProblem, cluster: Cluster, goal: Goal,
+                      cfg: Optional[VecConfig] = None,
+                      ref: Optional[Tuple[float, float]] = None,
+                      mesh=None) -> Solution:
+    """Batched SA; if ``mesh`` is given, chains are sharded over all its
+    devices with periodic cross-device replica exchange."""
+    cfg = cfg or VecConfig()
+    t_start = time.monotonic()
+    if ref is None:
+        from repro.core.annealer import reference_point
+        ref = reference_point(problem, cluster)
+    ref_M, ref_C = ref
+    dp = DeviceProblem.build(problem, cluster, ref_M, cfg)
+    J = problem.num_tasks
+    B = cfg.chains
+    key = jax.random.PRNGKey(cfg.seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    defaults = jnp.asarray([t.default_option for t in problem.tasks], jnp.int32)
+    opt0 = jnp.broadcast_to(defaults, (B, J)).copy()
+    # half the chains start from random configurations for diversity
+    rand_opt = jax.random.randint(k1, (B, J), 0, 1_000_000) % dp.n_opts[None, :]
+    opt0 = jnp.where((jnp.arange(B) % 2 == 0)[:, None], opt0, rand_opt)
+    prio0 = jax.random.normal(k2, (B, J)) * cfg.prio_sigma
+
+    dp_arrays = (dp.dur_bins, dp.demands, dp.costs, dp.n_opts, dp.pred_mask,
+                 dp.release_bins, dp.caps)
+    dp_static = (dp.dt, dp.T)
+
+    if mesh is None:
+        state = _run_sa_jit(dp_arrays, dp_static, goal.w, ref_M, ref_C, cfg,
+                            opt0, prio0, k3)
+    else:
+        n_dev = mesh.devices.size
+        assert B % n_dev == 0, (B, n_dev)
+        axis = mesh.axis_names[0]
+
+        keys = ["opt", "prio", "e", "best_opt", "best_prio", "best_e"]
+
+        def shard_fn(opt0, prio0):
+            dpl = DeviceProblem(*dp_arrays, *dp_static)
+            st = _sa_scan(dpl, goal.w, ref_M, ref_C, cfg, opt0, prio0,
+                          k3, axis_name=axis)
+            return tuple(st[k] for k in keys)  # scalars (T) stay device-local
+
+        fn = jax.jit(jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(axis), P(axis)),
+            out_specs=(P(axis),) * 6,
+            check_vma=False))
+        vals = fn(opt0, prio0)
+        state = dict(zip(keys, vals))
+
+    best_idx = int(jnp.argmin(state["best_e"]))
+    best_opt = np.asarray(state["best_opt"][best_idx], np.int64)
+    best_prio = np.asarray(state["best_prio"][best_idx], np.float64)
+
+    # event-exact re-evaluation on the host (removes grid quantization)
+    start, finish = sgs_schedule(problem, best_opt, priority=best_prio,
+                                 caps=cluster.caps)
+    cost = schedule_cost(problem, best_opt, cluster.prices_per_sec)
+    mk = float(finish.max())
+    sol = Solution(best_opt, start, finish, mk, cost,
+                   goal.energy(mk, cost, ref_M, ref_C),
+                   solver="agora-vectorized")
+    sol.solve_seconds = time.monotonic() - t_start
+    return sol

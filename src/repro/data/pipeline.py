@@ -1,0 +1,143 @@
+"""Deterministic sharded token data pipeline.
+
+Production semantics without external deps: an index-based dataset (seeded
+synthetic corpus or memory-mapped token file), host-sharded iteration
+(each data-parallel host reads only its shard), double-buffered prefetch on
+a background thread, and exact mid-epoch resume from a (step,) checkpoint —
+restoring a pipeline at step k yields bit-identical batches to a run that
+never stopped (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+    token_file: Optional[str] = None     # memory-mapped corpus (int32)
+    synthetic_ngram: int = 3             # synthetic corpus correlation order
+
+
+class _SyntheticCorpus:
+    """Deterministic pseudo-corpus: tokens from a seeded hash chain with
+    n-gram structure so models can actually learn (loss decreases)."""
+
+    BRANCHES = 4
+    JUMP_P = 0.08
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        V = cfg.vocab_size
+        self._trans = rng.integers(0, V, size=(min(V, 4096), self.BRANCHES),
+                                   dtype=np.int32)
+
+    def sequence(self, idx: int) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, idx))
+        V = cfg.vocab_size
+        out = np.empty(cfg.seq_len + 1, np.int32)
+        out[0] = rng.integers(0, V)
+        noise = rng.integers(0, self.BRANCHES, size=cfg.seq_len)
+        jump = rng.random(cfg.seq_len) < self.JUMP_P
+        jumps = rng.integers(0, V, size=cfg.seq_len)
+        for t in range(cfg.seq_len):
+            prev = out[t] % self._trans.shape[0]
+            out[t + 1] = jumps[t] if jump[t] else self._trans[prev, noise[t]]
+        return out
+
+
+class _FileCorpus:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.tokens = np.memmap(cfg.token_file, dtype=np.int32, mode="r")
+
+    def sequence(self, idx: int) -> np.ndarray:
+        n = self.cfg.seq_len + 1
+        start = (idx * self.cfg.seq_len) % max(len(self.tokens) - n, 1)
+        return np.asarray(self.tokens[start:start + n], np.int32)
+
+
+class TokenPipeline:
+    """Iterator of {'tokens': (B_host, S), 'labels': (B_host, S)} batches."""
+
+    def __init__(self, cfg: DataConfig, prefetch: int = 2):
+        assert cfg.global_batch % cfg.num_hosts == 0
+        self.cfg = cfg
+        self.host_batch = cfg.global_batch // cfg.num_hosts
+        self.corpus = _FileCorpus(cfg) if cfg.token_file else _SyntheticCorpus(cfg)
+        self.step = 0
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- deterministic batch assembly ------------------------------------
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        B, S = self.host_batch, self.cfg.seq_len
+        base = step * self.cfg.global_batch + self.cfg.host_id * B
+        seqs = np.stack([self.corpus.sequence(base + i) for i in range(B)])
+        return {"tokens": seqs[:, :-1].copy(), "labels": seqs[:, 1:].copy()}
+
+    # -- prefetching iterator --------------------------------------------
+    def _worker(self):
+        s = self.step
+        while not self._stop.is_set():
+            batch = self.batch_at(s)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((s, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            s += 1
+
+    def start(self):
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+        while not self._q.empty():
+            self._q.get_nowait()
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        if self._thread is None:
+            batch = self.batch_at(self.step)
+            self.step += 1
+            return batch
+        s, batch = self._q.get()
+        assert s == self.step, (s, self.step)
+        self.step += 1
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    # -- checkpoint/resume -------------------------------------------------
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step}
+
+    def load_state_dict(self, state: Dict[str, int]):
+        running = self._thread is not None
+        if running:
+            self.stop()
+        self.step = int(state["step"])
+        if running:
+            self.start()

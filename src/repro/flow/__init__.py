@@ -1,0 +1,1 @@
+from repro.flow.executor import FlowConfig, FlowResult, FlowRunner  # noqa: F401

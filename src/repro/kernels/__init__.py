@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the AGORA solver hot spots (see DESIGN.md §3).
+
+sched_energy: batched schedule capacity-violation (mask-matmul on the MXU)
+usl_runtime:  batched USL (paper Eq. 9) runtime prediction
+ops:          jit wrappers; ref: pure-jnp oracles backing the tests
+"""

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the solver kernels. These define the semantics the
+Pallas kernels must reproduce (asserted across shape/dtype sweeps in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sched_violation_ref(start, dur, dem, caps, T: int):
+    """Capacity-violation mass of a batch of candidate schedules on a time
+    grid — the hot spot of penalized ('Ising-form') schedule annealing.
+
+    start, dur: (B, J) f32 in grid units
+    dem:        (B, M, J) f32 per-task demands
+    caps:       (M,) f32
+    T:          grid length (static)
+
+    Returns viol (B,) f32:  sum_t sum_m max(0, usage_btm - caps_m).
+    usage[b, m, t] = sum_j dem[b,m,j] * 1[start_bj <= t < start_bj + dur_bj]
+    """
+    t = jnp.arange(T, dtype=jnp.float32)
+    s = start.astype(jnp.float32)[:, :, None]
+    e = s + dur.astype(jnp.float32)[:, :, None]
+    mask = ((t[None, None, :] >= s) & (t[None, None, :] < e)).astype(jnp.float32)
+    usage = jnp.einsum("bmj,bjt->bmt", dem.astype(jnp.float32), mask)
+    over = jnp.maximum(usage - caps.astype(jnp.float32)[None, :, None], 0.0)
+    return over.sum(axis=(1, 2))
+
+
+def usl_runtime_ref(n, alpha, beta, gamma, work):
+    """Batched USL runtime (paper Eq. 9): runtime = work / X(n) with
+    X(n) = gamma * n / (1 + alpha (n-1) + beta n (n-1)). All inputs
+    broadcastable to a common shape; f32 math."""
+    n = n.astype(jnp.float32)
+    a = alpha.astype(jnp.float32)
+    b = beta.astype(jnp.float32)
+    g = gamma.astype(jnp.float32)
+    w = work.astype(jnp.float32)
+    x = g * n / (1.0 + a * (n - 1.0) + b * n * (n - 1.0))
+    return w / jnp.maximum(x, 1e-9)

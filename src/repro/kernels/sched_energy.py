@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: batched schedule capacity-violation evaluation.
+
+This is the solver hot spot the paper points at for hardware acceleration
+(§5.4: "emerging specialized hardware systems ... could dramatically reduce
+the solve time" — their citation is an analog Ising machine; ours is the
+MXU). The classical interval-stabbing resource check is re-expressed as a
+dense mask-matmul over a time grid:
+
+    mask[j, t]  = 1[start_j <= t < start_j + dur_j]      (built on the fly)
+    usage[m, t] = dem[m, :] @ mask[:, t]                  (MXU)
+    viol        = sum relu(usage - caps)
+
+Tiling: grid = (B, T/Tt). Per step the kernel holds one candidate's
+(J-padded) start/dur vectors, its (M x J) demand matrix and a (J x Tt) mask
+tile in VMEM; Tt=128 lanes, J padded to a multiple of 8 sublanes (128 for
+the MXU contraction). The (B,1) output block is revisited across the T grid
+dimension and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_T = 128
+
+
+def _kernel(start_ref, dur_ref, dem_ref, caps_ref, out_ref, *, T: int):
+    ti = pl.program_id(1)
+    t0 = (ti * TILE_T).astype(jnp.float32)
+    J = start_ref.shape[1]
+    # mask tile (J, Tt): t >= start & t < start + dur
+    t = t0 + jax.lax.broadcasted_iota(jnp.float32, (J, TILE_T), 1)
+    s = start_ref[0, :].astype(jnp.float32)[:, None]
+    d = dur_ref[0, :].astype(jnp.float32)[:, None]
+    mask = jnp.where((t >= s) & (t < s + d), 1.0, 0.0)
+    # usage (M, Tt) on the MXU
+    dem = dem_ref[0].astype(jnp.float32)                     # (M, J)
+    usage = jax.lax.dot_general(dem, mask, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    caps = caps_ref[:].astype(jnp.float32)[:, None]          # (M, 1)
+    # time bins beyond T are padding: mask them out
+    valid = (t0 + jax.lax.broadcasted_iota(
+        jnp.float32, (usage.shape[0], TILE_T), 1)) < float(T)
+    over = jnp.where(valid, jnp.maximum(usage - caps, 0.0), 0.0)
+    tile_sum = jnp.sum(over)
+
+    @pl.when(ti == 0)
+    def _init():
+        out_ref[0, 0] = 0.0
+
+    out_ref[0, 0] += tile_sum
+
+
+@functools.partial(jax.jit, static_argnames=("T", "interpret"))
+def sched_violation(start, dur, dem, caps, *, T: int, interpret: bool = False):
+    """start, dur: (B, J); dem: (B, M, J); caps: (M,). Returns (B,) f32.
+
+    Pads J to a multiple of 128 (zero demand => no contribution) and T to a
+    multiple of TILE_T (bins beyond T are masked inside the kernel).
+    """
+    B, J = start.shape
+    M = dem.shape[1]
+    Jp = max(128, -(-J // 128) * 128)
+    Tp = -(-T // TILE_T) * TILE_T
+    startp = jnp.pad(start.astype(jnp.float32), ((0, 0), (0, Jp - J)),
+                     constant_values=2.0 * Tp)   # padded tasks start off-grid
+    durp = jnp.pad(dur.astype(jnp.float32), ((0, 0), (0, Jp - J)))
+    demp = jnp.pad(dem.astype(jnp.float32), ((0, 0), (0, 0), (0, Jp - J)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, T=T),
+        grid=(B, Tp // TILE_T),
+        in_specs=[
+            pl.BlockSpec((1, Jp), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, M, Jp), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((M,), lambda b, t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(startp, durp, demp, caps.astype(jnp.float32))
+    return out[:, 0]

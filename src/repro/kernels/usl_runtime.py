@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: batched USL runtime prediction (paper Eq. 9).
+
+The Predictor evaluates runtime(task, instance-type, count) over the whole
+configuration grid for every annealer proposal; this is a large elementwise
+map — a pure VPU kernel. Inputs are flattened to (N,) and tiled as
+(8, 128) VMEM blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024  # 8 sublanes x 128 lanes
+
+
+def _kernel(n_ref, a_ref, b_ref, g_ref, w_ref, out_ref):
+    n = n_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    x = g * n / (1.0 + a * (n - 1.0) + b * n * (n - 1.0))
+    out_ref[...] = w / jnp.maximum(x, 1e-9)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def usl_runtime(n, alpha, beta, gamma, work, *, interpret: bool = False):
+    """All inputs broadcastable; returns f32 array of the broadcast shape."""
+    shape = jnp.broadcast_shapes(n.shape, alpha.shape, beta.shape,
+                                 gamma.shape, work.shape)
+    args = [jnp.broadcast_to(x, shape).reshape(-1) for x in
+            (n, alpha, beta, gamma, work)]
+    N = args[0].shape[0]
+    Np = -(-N // BLOCK) * BLOCK
+    args = [jnp.pad(x.astype(jnp.float32), (0, Np - N), constant_values=1.0)
+            .reshape(Np // BLOCK, 8, BLOCK // 8) for x in args]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Np // BLOCK,),
+        in_specs=[pl.BlockSpec((1, 8, BLOCK // 8), lambda i: (i, 0, 0))] * 5,
+        out_specs=pl.BlockSpec((1, 8, BLOCK // 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np // BLOCK, 8, BLOCK // 8), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(-1)[:N].reshape(shape)

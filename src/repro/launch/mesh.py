@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Never touches jax device state at import time — all builders are functions.
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the pod axis
+carries the cross-pod data-parallel replica dimension (hierarchical
+reduce: reduce-scatter in-pod, all-reduce across pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh_for(devices: int, model_parallel: int = 1):
+    """Elastic-scaling helper: best (data, model) mesh for an arbitrary
+    device count (used by the flow executor when the pool resizes)."""
+    assert devices % model_parallel == 0, (devices, model_parallel)
+    return _mk((devices // model_parallel, model_parallel), ("data", "model"))
+
+
+def make_solver_mesh(devices=None):
+    """1-D chains mesh for the distributed annealer."""
+    devices = devices if devices is not None else jax.devices()
+    return _mk((len(devices),), ("chains",))

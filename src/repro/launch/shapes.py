@@ -1,0 +1,82 @@
+"""Assigned input-shape sets and abstract input specs (ShapeDtypeStruct
+stand-ins — weak-type-correct, shardable, never allocated).
+
+  train_4k     seq=4096   global_batch=256   -> train_step
+  prefill_32k  seq=32768  global_batch=32    -> prefill (forward) step
+  decode_32k   seq=32768  global_batch=128   -> serve_step (1 token + cache)
+  long_500k    seq=524288 global_batch=1     -> serve_step; SSM/hybrid only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig, data_axes
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype, mesh, spec):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _dp_spec(mesh, batch: int):
+    if mesh is None:
+        return None
+    dp = data_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return dp if (n > 1 and batch % n == 0) else None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one (arch x shape) cell."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    dp = _dp_spec(mesh, B)
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embedding_inputs:
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                               P(dp, None, None))
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+    if cfg.cross_attn_every and shape.kind != "decode":
+        batch["patches"] = _sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16,
+                                mesh, P(dp, None, None))
+    return batch
+
+
+def abstract_cache(model: Model, shape: ShapeSpec):
+    """Abstract KV/state cache for decode cells (sharded SDS tree + specs)."""
+    return model.init_cache(shape.global_batch, shape.seq_len, abstract=True)
+
+
+def runnable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """Returns a skip-reason string or None if this cell runs."""
+    sub_quadratic = cfg.block_pattern in ("rwkv6", "zamba2")
+    if shape.name == "long_500k" and not sub_quadratic:
+        return "pure full-attention arch skips long_500k (per brief)"
+    return None

@@ -1,0 +1,227 @@
+"""Shared model-config and parameter utilities.
+
+Every assigned architecture is expressed as one `ModelConfig`. Parameters
+are plain pytrees (nested dicts of jnp arrays); init returns matching
+ShapeDtypeStructs when ``abstract=True`` so the multi-pod dry-run never
+allocates memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    vocab_size: int = 256
+
+    # --- MoE ---
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    d_ff_shared: int = 0          # merged shared-expert hidden width (0 = none)
+    capacity_factor: float = 1.25
+    first_dense: int = 0          # leading dense layers (deepseek-v2-lite: 1)
+    router_aux_coef: float = 0.01
+
+    # --- MLA (deepseek) ---
+    mla: bool = False
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mla_absorb: bool = True       # absorbed (compressed-space) decode attention
+
+    # --- SSM / hybrid ---
+    block_pattern: str = "attn"   # attn | mamba2 | rwkv6 | zamba2
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_kernel: int = 4
+    shared_attn_every: int = 0    # zamba2: shared attn block every N mamba layers
+    gla_chunk: int = 128          # chunk length for chunked linear attention
+
+    # --- VLM ---
+    cross_attn_every: int = 0     # insert a cross-attn layer every N self layers
+    num_patches: int = 0          # image patch-embedding count (stub frontend)
+
+    # --- modality stubs ---
+    embedding_inputs: bool = False  # inputs are precomputed frame embeddings
+
+    # --- misc ---
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"       # compute dtype
+    param_dtype: str = "float32"
+    remat: str = "full"           # none | full | dots
+    logit_chunk: int = 0          # 0 = single-shot loss; else seq-chunked CE
+    attn_chunk: int = 1024        # query-chunk for blockwise (flash-style) attention
+    scan_layers: bool = True      # False: unroll layer loop (dry-run accounting —
+                                  # XLA cost_analysis counts while bodies once)
+    # --- performance flags (hillclimb levers; see EXPERIMENTS.md §Perf) ---
+    fast_norm: bool = False       # RMSNorm keeps the tensor bf16 (f32 stats
+                                  # only) so TP all-reduces stay bf16
+    seq_parallel: bool = False    # sequence-sharded residual stream between
+                                  # blocks (all-reduce -> RS+AG)
+    moe_sp_dispatch: bool = False # MoE routes sequence-sharded tokens per TP
+                                  # rank instead of replicated routing
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mesh axis conventions
+# ---------------------------------------------------------------------------
+
+DATA_AXES: Tuple[str, ...] = ("pod", "data")  # pod axis absent on single-pod
+TP_AXIS = "model"
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def axis_size(mesh, name: str) -> int:
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> PartitionSpec rules
+# ---------------------------------------------------------------------------
+
+# Logical axis vocabulary used by param initializers.
+#   "embed"    : d_model            -> replicated
+#   "vocab"    : vocabulary          -> model
+#   "heads"    : attention heads     -> model
+#   "kv_heads" : kv heads            -> model if divisible else replicated
+#   "mlp"      : ffn hidden          -> model
+#   "experts"  : MoE experts         -> model (expert parallel)
+#   "inner"    : ssm inner dim       -> model
+#   "layers"   : stacked scan dim    -> replicated
+#   None       : replicated
+
+
+def _phys(logical: str, mesh, dim: int):
+    if mesh is None:
+        return None
+    if logical in ("vocab", "heads", "mlp", "experts", "inner"):
+        m = axis_size(mesh, TP_AXIS)
+        return TP_AXIS if (m > 1 and dim % m == 0) else None
+    if logical == "kv_heads":
+        m = axis_size(mesh, TP_AXIS)
+        return TP_AXIS if (m > 1 and dim % m == 0) else None
+    return None
+
+
+def spec_for(logical_axes: Tuple[Optional[str], ...], shape: Tuple[int, ...], mesh) -> P:
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used = set()
+    out = []
+    for ax, dim in zip(logical_axes, shape):
+        p = _phys(ax, mesh, dim) if ax else None
+        if p in used:  # one mesh axis at most once per spec
+            p = None
+        if p:
+            used.add(p)
+        out.append(p)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+
+class Initializer:
+    """Collects parameter leaves with logical axes; supports abstract init."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None, abstract: bool = False, seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.abstract = abstract
+        self.key = jax.random.PRNGKey(seed)
+        self.specs: Dict[str, Any] = {}
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(self, path: str, shape, logical, init="normal", scale=None):
+        shape = tuple(int(s) for s in shape)
+        spec = spec_for(tuple(logical), shape, self.mesh)
+        self.specs[path] = spec
+        dtype = self.cfg.pdtype
+        if self.abstract:
+            sharding = None
+            if self.mesh is not None:
+                sharding = jax.sharding.NamedSharding(self.mesh, spec)
+            return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+            s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+            return (jax.random.normal(self._next(), shape, jnp.float32) * s).astype(dtype)
+        if init == "embed":
+            s = scale if scale is not None else 1.0
+            return (jax.random.normal(self._next(), shape, jnp.float32) * s).astype(dtype)
+        if init == "uniform":
+            s = scale if scale is not None else 1.0
+            return (jax.random.uniform(self._next(), shape, jnp.float32, -s, s)).astype(dtype)
+        raise ValueError(init)
+
+
+def tree_specs(specs: Dict[str, Any], tree) -> Any:
+    """Rebuild a pytree of PartitionSpecs mirroring ``tree`` from a flat path map."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, _ in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append(specs[key])
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,192 @@
+"""Chunked gated linear attention — the TPU-native form of both the Mamba2
+SSD recurrence (scalar per-head decay) and the RWKV6 "Finch" recurrence
+(vector per-channel decay, exclusive current-token bonus).
+
+Recurrence (state S in R^{dk x dv} per head):
+    S_t = Diag(exp(g_t)) . S_{t-1} + k_t v_t^T
+    inclusive (mamba2):  y_t = q_t . S_t
+    exclusive+bonus u (rwkv6):  y_t = q_t . S_{t-1} + (q_t * u * k_t).sum() v_t
+
+Chunking: intra-chunk contributions are dense matmuls (MXU), inter-chunk via
+a lax.scan over chunk states. Two intra-chunk strategies:
+
+* scalar decay  -> score[t,s] = (q_t . k_s) * exp(G_t - G_s): one matmul +
+  an outer-difference decay mask. Chunk 128, MXU-aligned.
+* vector decay  -> score[t,s] = sum_d q_td k_sd exp(G_{t',d} - G_{s,d}) with
+  t' = t-1 (exclusive). Computed with an explicit (C, C, dk) exponent-
+  difference tensor; all exponents are <= 0 so this is unconditionally
+  stable. Chunk kept small (16) since the tensor is O(C^2 dk).
+
+``*_ref`` scan oracles live here too and back the property tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _split_chunks(x, c):
+    B, S = x.shape[0], x.shape[1]
+    assert S % c == 0, (S, c)
+    return x.reshape(B, S // c, c, *x.shape[2:])
+
+
+def _pad_to_chunks(q, k, v, g, c):
+    """Pad sequence to a multiple of c. Padding is inert: k=0 adds nothing to
+    the state and g=0 (decay exp(0)=1) preserves it."""
+    S = q.shape[1]
+    pad = (-S) % c
+    if pad == 0:
+        return q, k, v, g, S
+    pw = ((0, 0), (0, pad)) + ((0, 0),) * (q.ndim - 2)
+    gw = ((0, 0), (0, pad)) + ((0, 0),) * (g.ndim - 2)
+    return (jnp.pad(q, pw), jnp.pad(k, pw), jnp.pad(v, pw),
+            jnp.pad(g, gw), S)
+
+
+# ---------------------------------------------------------------------------
+# Reference: pure scan (oracle)
+# ---------------------------------------------------------------------------
+
+
+def gla_scan_ref(q, k, v, g, *, inclusive: bool, u: Optional[jnp.ndarray] = None,
+                 init_state: Optional[jnp.ndarray] = None):
+    """q,k: (B,S,H,dk), v: (B,S,H,dv), g: (B,S,H) scalar or (B,S,H,dk) vector
+    log-decay. Returns (y, final_state) with state (B,H,dk,dv). f32 math."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    gf = g.astype(jnp.float32)
+    if gf.ndim == 3:
+        gf = gf[..., None]  # broadcast scalar decay over dk
+        gf = jnp.broadcast_to(gf, (B, S, H, dk))
+    S0 = jnp.zeros((B, H, dk, dv), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+
+    def step(state, xs):
+        qt, kt, vt, gt = xs  # (B,H,dk), (B,H,dk), (B,H,dv), (B,H,dk)
+        if inclusive:
+            state = state * jnp.exp(gt)[..., None] + kt[..., None] * vt[..., None, :]
+            yt = jnp.einsum("bhk,bhkv->bhv", qt, state)
+        else:
+            yt = jnp.einsum("bhk,bhkv->bhv", qt, state)
+            if u is not None:
+                yt = yt + jnp.einsum("bhk,hk,bhk->bh", qt, u.astype(jnp.float32), kt)[..., None] * vt
+            state = state * jnp.exp(gt)[..., None] + kt[..., None] * vt[..., None, :]
+        return state, yt
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (qf, kf, vf, gf))
+    final, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Chunked, scalar decay (Mamba2 SSD), inclusive
+# ---------------------------------------------------------------------------
+
+
+def gla_chunked_scalar(q, k, v, g, *, chunk: int = 128,
+                       init_state: Optional[jnp.ndarray] = None):
+    """g: (B,S,H) scalar log-decay per head. Inclusive (y_t sees k_t v_t)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, S)
+    q, k, v, g, S_orig = _pad_to_chunks(q, k, v, g.astype(jnp.float32), c)
+    S = q.shape[1]
+    qc, kc, vc = (_split_chunks(x, c) for x in (q, k, v))          # (B,N,c,H,·)
+    gc = _split_chunks(g, c)                                        # (B,N,c,H)
+    G = jnp.cumsum(gc, axis=2)                                      # inclusive cumsum
+    Gtot = G[:, :, -1]                                              # (B,N,H)
+    N = qc.shape[1]
+
+    mask = jnp.tril(jnp.ones((c, c), bool))                         # s <= t
+
+    def body(state, xs):
+        qt, kt, vt, Gt, Gtot_t = xs  # (B,c,H,·), G (B,c,H), Gtot (B,H)
+        qf, kf, vf = (x.astype(jnp.float32) for x in (qt, kt, vt))
+        # intra: scores[t,s] = (q_t . k_s) exp(G_t - G_s), s <= t
+        qk = jnp.einsum("bthk,bshk->bhts", qf, kf)
+        decay = jnp.exp(jnp.clip(Gt.transpose(0, 2, 1)[:, :, :, None]
+                                 - Gt.transpose(0, 2, 1)[:, :, None, :], -60.0, 0.0))
+        scores = jnp.where(mask[None, None], qk * decay, 0.0)
+        y = jnp.einsum("bhts,bshv->bthv", scores, vf)
+        # inter: y_t += (q_t exp(G_t)) . S_prev
+        y = y + jnp.einsum("bthk,bhkv->bthv", qf * jnp.exp(Gt)[..., None], state)
+        # state update: S = exp(Gtot) S + sum_s (k_s exp(Gtot - G_s)) v_s^T
+        kd = kf * jnp.exp(jnp.clip(Gtot_t[:, None] - Gt, -60.0, 0.0))[..., None]
+        state = state * jnp.exp(Gtot_t)[..., None, None] + jnp.einsum("bshk,bshv->bhkv", kd, vf)
+        return state, y
+
+    S0 = jnp.zeros((B, H, dk, dv), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (qc, kc, vc, G, Gtot))
+    final, ys = jax.lax.scan(body, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dv)[:, :S_orig]
+    return y.astype(v.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Chunked, vector decay (RWKV6), exclusive + bonus
+# ---------------------------------------------------------------------------
+
+
+def gla_chunked_vector(q, k, v, g, u, *, chunk: int = 16,
+                       init_state: Optional[jnp.ndarray] = None):
+    """g: (B,S,H,dk) per-channel log-decay. Exclusive with bonus u (H,dk)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, S)
+    q, k, v, g, S_orig = _pad_to_chunks(q, k, v, g.astype(jnp.float32), c)
+    S = q.shape[1]
+    qc, kc, vc = (_split_chunks(x, c) for x in (q, k, v))
+    gc = _split_chunks(g, c)                                        # (B,N,c,H,dk)
+    G = jnp.cumsum(gc, axis=2)
+    Gtot = G[:, :, -1]                                              # (B,N,H,dk)
+    Gprev = G - gc                                                  # exclusive cumsum
+
+    smask = jnp.tril(jnp.ones((c, c), bool), k=-1)                  # s < t
+
+    def body(state, xs):
+        qt, kt, vt, Gp, Gi, Gtot_t = xs
+        qf, kf, vf = (x.astype(jnp.float32) for x in (qt, kt, vt))
+        # intra (exact, stable): exponents G_{t-1,d} - G_{s,d} <= 0 for s < t
+        ed = jnp.exp(jnp.clip(Gp[:, :, None] - Gi[:, None, :], -60.0, 0.0))  # (B,t,s,H,dk)
+        scores = jnp.einsum("bthk,bshk,btshk->bhts", qf, kf, ed)
+        scores = jnp.where(smask[None, None], scores, 0.0)
+        y = jnp.einsum("bhts,bshv->bthv", scores, vf)
+        # bonus (current token)
+        y = y + jnp.einsum("bthk,hk,bthk->bth", qf, u.astype(jnp.float32), kf)[..., None] * vf
+        # inter: y_t += (q_t exp(G_{t-1})) . S_prev
+        y = y + jnp.einsum("bthk,bhkv->bthv", qf * jnp.exp(Gp), state)
+        # state update
+        kd = kf * jnp.exp(jnp.clip(Gtot_t[:, None] - Gi, -60.0, 0.0))
+        state = state * jnp.exp(Gtot_t)[..., None] + jnp.einsum("bshk,bshv->bhkv", kd, vf)
+        return state, y
+
+    S0 = jnp.zeros((B, H, dk, dv), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (qc, kc, vc, Gprev, G, Gtot))
+    final, ys = jax.lax.scan(body, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dv)[:, :S_orig]
+    return y.astype(v.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode step
+# ---------------------------------------------------------------------------
+
+
+def gla_step(state, q, k, v, g, *, inclusive: bool, u: Optional[jnp.ndarray] = None):
+    """state: (B,H,dk,dv); q,k: (B,H,dk); v: (B,H,dv); g: (B,H) or (B,H,dk)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    gf = g.astype(jnp.float32)
+    if gf.ndim == 2:
+        gf = jnp.broadcast_to(gf[..., None], kf.shape)
+    if inclusive:
+        state = state * jnp.exp(gf)[..., None] + kf[..., None] * vf[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", qf, state)
+    else:
+        y = jnp.einsum("bhk,bhkv->bhv", qf, state)
+        if u is not None:
+            y = y + jnp.einsum("bhk,hk,bhk->bh", qf, u.astype(jnp.float32), kf)[..., None] * vf
+        state = state * jnp.exp(gf)[..., None] + kf[..., None] * vf[..., None, :]
+    return y.astype(v.dtype), state

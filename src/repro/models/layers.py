@@ -1,0 +1,277 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA/MQA/MHA attention (blockwise),
+MLA (DeepSeek multi-head latent attention), cross-attention, SwiGLU MLP.
+
+All functions are pure; params are nested dicts produced by ``init_*``
+builders that register sharding specs on the Initializer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Initializer, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(ini: Initializer, path: str, dim: int, stack=()):
+    return {"scale": ini.param(f"{path}/scale", (*stack, dim), (*("layers",) * len(stack), None), init="ones")}
+
+
+def rmsnorm(p, x, eps: float, fast: bool = False):
+    """RMSNorm with f32 statistics. ``fast=True`` keeps the normalized tensor
+    in the input dtype (only the per-row statistic is f32): this prevents XLA
+    SPMD from hoisting an f32 convert through the preceding tensor-parallel
+    all-reduce, halving TP collective bytes (see EXPERIMENTS.md §Perf)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    if fast:
+        return x * r.astype(x.dtype) * p["scale"].astype(x.dtype)
+    out = x.astype(jnp.float32) * r
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scaled dot-product attention (blockwise over query chunks)
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset, scale: float):
+    """q: (B, Sq, H, D), k/v: (B, Sk, KH, D|Dv) with H % KH == 0.
+
+    Returns (B, Sq, H, Dv). Scores accumulate in f32.
+    """
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, KH * G, v.shape[-1])
+
+
+def attention_core(q, k, v, *, causal: bool, q_offset=0, chunk: int = 0, scale=None):
+    """Blockwise (flash-style) attention: scan over query chunks so the
+    materialized score block is (B, H, chunk, Sk) instead of (B, H, Sq, Sk).
+    """
+    B, Sq, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    if not chunk or Sq <= chunk:
+        return _sdpa(q, k, v, causal=causal, q_offset=q_offset, scale=scale)
+    assert Sq % chunk == 0, (Sq, chunk)
+    n = Sq // chunk
+    qs = q.reshape(B, n, chunk, H, D).transpose(1, 0, 2, 3, 4)  # (n, B, c, H, D)
+
+    def body(carry, qc_i):
+        qc, i = qc_i
+        out = _sdpa(qc, k, v, causal=causal, q_offset=q_offset + i * chunk, scale=scale)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention(ini: Initializer, path: str, cfg: ModelConfig, stack=()):
+    L = ("layers",) * len(stack)
+    d, H, KH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ini.param(f"{path}/wq", (*stack, d, H, Dh), (*L, None, "heads", None)),
+        "wk": ini.param(f"{path}/wk", (*stack, d, KH, Dh), (*L, None, "kv_heads", None)),
+        "wv": ini.param(f"{path}/wv", (*stack, d, KH, Dh), (*L, None, "kv_heads", None)),
+        "wo": ini.param(f"{path}/wo", (*stack, H, Dh, d), (*L, "heads", None, None),
+                        scale=1.0 / math.sqrt(H * Dh)),
+    }
+
+
+def attention(p, x, cfg: ModelConfig, *, positions, cache=None, cache_index=None):
+    """Self attention. If ``cache`` is given (dict with k, v of shape
+    (B, S_max, KH, Dh)), performs a decode step: append at cache_index and
+    attend over the cache. Returns (out, new_cache)."""
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        out = attention_core(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_index, 0, 0))
+        # decode: mask out positions beyond cache_index via causal offset
+        out = attention_core(q, ck.astype(dt), cv.astype(dt), causal=True,
+                             q_offset=cache_index, chunk=0)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM): queries from text, kv from patch embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(ini: Initializer, path: str, cfg: ModelConfig, stack=()):
+    L = ("layers",) * len(stack)
+    d, H, KH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ini.param(f"{path}/wq", (*stack, d, H, Dh), (*L, None, "heads", None)),
+        "wk": ini.param(f"{path}/wk", (*stack, d, KH, Dh), (*L, None, "kv_heads", None)),
+        "wv": ini.param(f"{path}/wv", (*stack, d, KH, Dh), (*L, None, "kv_heads", None)),
+        "wo": ini.param(f"{path}/wo", (*stack, H, Dh, d), (*L, "heads", None, None),
+                        scale=1.0 / math.sqrt(H * Dh)),
+        "gate": ini.param(f"{path}/gate", (*stack,), L, init="zeros"),
+    }
+
+
+def cross_attention(p, x, patches, cfg: ModelConfig, *, kv_cache=None):
+    """patches: (B, P, d) precomputed embeddings (stub frontend). kv_cache,
+    when provided, holds precomputed {k, v} over patches (decode path)."""
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if kv_cache is not None:
+        k, v = kv_cache["k"].astype(dt), kv_cache["v"].astype(dt)
+    else:
+        k = jnp.einsum("bpd,dhk->bphk", patches, p["wk"].astype(dt))
+        v = jnp.einsum("bpd,dhk->bphk", patches, p["wv"].astype(dt))
+    out = attention_core(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out * jnp.tanh(p["gate"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(ini: Initializer, path: str, cfg: ModelConfig, stack=()):
+    L = ("layers",) * len(stack)
+    d, H = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq": ini.param(f"{path}/wq", (*stack, d, H, dn + dr), (*L, None, "heads", None)),
+        "wkv_a": ini.param(f"{path}/wkv_a", (*stack, d, r), (*L, None, None)),
+        "wk_rope": ini.param(f"{path}/wk_rope", (*stack, d, dr), (*L, None, None)),
+        "kv_norm": ini.param(f"{path}/kv_norm", (*stack, r), (*L, None), init="ones"),
+        "wk_b": ini.param(f"{path}/wk_b", (*stack, r, H, dn), (*L, None, "heads", None)),
+        "wv_b": ini.param(f"{path}/wv_b", (*stack, r, H, dv), (*L, None, "heads", None)),
+        "wo": ini.param(f"{path}/wo", (*stack, H, dv, d), (*L, "heads", None, None),
+                        scale=1.0 / math.sqrt(H * dv)),
+    }
+
+
+def mla_attention(p, x, cfg: ModelConfig, *, positions, cache=None, cache_index=None):
+    """Cache (decode) holds the COMPRESSED latent: c_kv (B, S, r) + k_rope
+    (B, S, dr). Decode uses the absorbed formulation when cfg.mla_absorb:
+    queries are mapped into latent space so no per-step expansion of the
+    full K/V is needed (the MLA inference trick)."""
+    dt = cfg.cdtype
+    B, S, _ = x.shape
+    H, dn, dr, dv, r = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, c_kv, cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["wk_rope"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(dt))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        out = attention_core(qf, k, v, causal=True, chunk=cfg.attn_chunk, scale=scale)
+        new_cache = None
+    else:
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                                          (0, cache_index, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                                          (0, cache_index, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        Sk = cc.shape[1]
+        kpos_ok = (jnp.arange(Sk) <= cache_index)[None, None, None, :]
+        if cfg.mla_absorb:
+            # absorb W_UK into q: q_lat (B,S,H,r); scores = q_lat . c_kv + q_rope . k_rope
+            q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(dt))
+            s_n = jnp.einsum("bshr,btr->bhst", q_lat, cc.astype(dt),
+                             preferred_element_type=jnp.float32)
+            s_r = jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(dt),
+                             preferred_element_type=jnp.float32)
+            w = jax.nn.softmax(jnp.where(kpos_ok, (s_n + s_r) * scale, -1e30), axis=-1)
+            ctx = jnp.einsum("bhst,btr->bshr", w.astype(dt), cc.astype(dt))
+            out = jnp.einsum("bshr,rhk->bshk", ctx, p["wv_b"].astype(dt))
+        else:
+            k_nope = jnp.einsum("btr,rhk->bthk", cc.astype(dt), p["wk_b"].astype(dt))
+            v = jnp.einsum("btr,rhk->bthk", cc.astype(dt), p["wv_b"].astype(dt))
+            s_n = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+            s_r = jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(dt),
+                             preferred_element_type=jnp.float32)
+            w = jax.nn.softmax(jnp.where(kpos_ok, (s_n + s_r) * scale, -1e30), axis=-1)
+            out = jnp.einsum("bhst,bthk->bshk", w.astype(dt), v)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(ini: Initializer, path: str, d: int, d_ff: int, stack=()):
+    L = ("layers",) * len(stack)
+    return {
+        "w_gate": ini.param(f"{path}/w_gate", (*stack, d, d_ff), (*L, None, "mlp")),
+        "w_up": ini.param(f"{path}/w_up", (*stack, d, d_ff), (*L, None, "mlp")),
+        "w_down": ini.param(f"{path}/w_down", (*stack, d_ff, d), (*L, "mlp", None),
+                            scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp(p, x, dt):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"].astype(dt))

@@ -1,0 +1,241 @@
+"""Mamba2 (SSD) and RWKV6 (Finch) layers, both lowered onto the shared
+chunked gated-linear-attention primitive in ``gla.py``.
+
+Decode state:
+  mamba2: {"conv": (B, conv_dim, K-1), "ssm": (B, H, d_state, head_dim)}
+  rwkv6:  {"tm_shift": (B, d), "cm_shift": (B, d), "wkv": (B, H, hd, hd)}
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Initializer, ModelConfig
+from repro.models.gla import (gla_chunked_scalar, gla_chunked_vector, gla_step)
+from repro.models.layers import rmsnorm
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state  # x, B, C (ngroups=1)
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2(ini: Initializer, path: str, cfg: ModelConfig, stack=()):
+    L = ("layers",) * len(stack)
+    d = cfg.d_model
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    proj_out = 2 * d_inner + 2 * cfg.ssm_state + H  # z, x, B, C, dt
+    return {
+        "in_proj": ini.param(f"{path}/in_proj", (*stack, d, proj_out), (*L, None, "inner")),
+        "conv_w": ini.param(f"{path}/conv_w", (*stack, cfg.conv_kernel, conv_dim),
+                            (*L, None, "inner"), scale=1.0 / math.sqrt(cfg.conv_kernel)),
+        "conv_b": ini.param(f"{path}/conv_b", (*stack, conv_dim), (*L, "inner"), init="zeros"),
+        "a_log": ini.param(f"{path}/a_log", (*stack, H), (*L, "inner"), init="zeros"),
+        "dt_bias": ini.param(f"{path}/dt_bias", (*stack, H), (*L, "inner"), init="zeros"),
+        "d_skip": ini.param(f"{path}/d_skip", (*stack, H), (*L, "inner"), init="ones"),
+        "norm": ini.param(f"{path}/norm", (*stack, d_inner), (*L, "inner"), init="ones"),
+        "out_proj": ini.param(f"{path}/out_proj", (*stack, d_inner, d), (*L, "inner", None),
+                              scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, C); w: (K, C) depthwise. state: (B, K-1, C) trailing inputs."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out + b[None, None], new_state
+
+
+def mamba2_layer(p, x, cfg: ModelConfig, *, state=None):
+    """x: (B, S, d). state for decode (S == 1). Returns (y, new_state)."""
+    dt_ = cfg.cdtype
+    B, S, d = x.shape
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    hd, ds = cfg.ssm_head_dim, cfg.ssm_state
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(dt_))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_),
+                                 conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bs, Cs = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                                          # (H,)
+    g = dt * A[None, None]                                                                # log decay
+
+    q = jnp.broadcast_to(Cs[:, :, None], (B, S, H, ds))
+    kk = jnp.broadcast_to(Bs[:, :, None], (B, S, H, ds))
+    v = (xs.reshape(B, S, H, hd).astype(jnp.float32) * dt[..., None]).astype(dt_)
+
+    if state is None:
+        y, final = gla_chunked_scalar(q, kk, v, g, chunk=cfg.gla_chunk)
+        new_ssm = final
+    else:
+        yt, new_ssm = gla_step(state["ssm"], q[:, 0], kk[:, 0], v[:, 0], g[:, 0],
+                               inclusive=True)
+        y = yt[:, None]
+
+    y = y + xs.reshape(B, S, H, hd) * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z), cfg.norm_eps,
+                fast=cfg.fast_norm)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    new_state = None if state is None else {"conv": new_conv.astype(state["conv"].dtype),
+                                            "ssm": new_ssm}
+    return out, new_state
+
+
+def mamba2_state(cfg: ModelConfig, B: int):
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((B, cfg.conv_kernel - 1, conv_dim), cfg.cdtype),
+        "ssm": jnp.zeros((B, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+_STREAMS = 5  # r, k, v, w, g
+_LORA_MIX = 32
+_LORA_DECAY = 64
+
+
+def rwkv6_dims(cfg: ModelConfig):
+    hd = cfg.ssm_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv6_tm(ini: Initializer, path: str, cfg: ModelConfig, stack=()):
+    L = ("layers",) * len(stack)
+    d = cfg.d_model
+    H, hd = rwkv6_dims(cfg)
+    return {
+        "mu_base": ini.param(f"{path}/mu_base", (*stack, d), (*L, None), init="uniform", scale=0.5),
+        "mu": ini.param(f"{path}/mu", (*stack, _STREAMS, d), (*L, None, None), init="uniform", scale=0.5),
+        "mix_w1": ini.param(f"{path}/mix_w1", (*stack, d, _STREAMS * _LORA_MIX), (*L, None, None), scale=0.02),
+        "mix_w2": ini.param(f"{path}/mix_w2", (*stack, _STREAMS, _LORA_MIX, d), (*L, None, None, None), scale=0.02),
+        "wr": ini.param(f"{path}/wr", (*stack, d, d), (*L, None, "inner")),
+        "wk": ini.param(f"{path}/wk", (*stack, d, d), (*L, None, "inner")),
+        "wv": ini.param(f"{path}/wv", (*stack, d, d), (*L, None, "inner")),
+        "wg": ini.param(f"{path}/wg", (*stack, d, d), (*L, None, "inner")),
+        "w0": ini.param(f"{path}/w0", (*stack, d), (*L, None), init="uniform", scale=1.0),
+        "decay_w1": ini.param(f"{path}/decay_w1", (*stack, d, _LORA_DECAY), (*L, None, None), scale=0.02),
+        "decay_w2": ini.param(f"{path}/decay_w2", (*stack, _LORA_DECAY, d), (*L, None, None), scale=0.02),
+        "u": ini.param(f"{path}/u", (*stack, H, hd), (*L, "inner", None), init="uniform", scale=0.5),
+        "ln_scale": ini.param(f"{path}/ln_scale", (*stack, d), (*L, None), init="ones"),
+        "wo": ini.param(f"{path}/wo", (*stack, d, d), (*L, "inner", None), scale=1.0 / math.sqrt(d)),
+    }
+
+
+def init_rwkv6_cm(ini: Initializer, path: str, cfg: ModelConfig, stack=()):
+    L = ("layers",) * len(stack)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ini.param(f"{path}/mu_k", (*stack, d), (*L, None), init="uniform", scale=0.5),
+        "mu_r": ini.param(f"{path}/mu_r", (*stack, d), (*L, None), init="uniform", scale=0.5),
+        "wk": ini.param(f"{path}/wk", (*stack, d, f), (*L, None, "mlp")),
+        "wv": ini.param(f"{path}/wv", (*stack, f, d), (*L, "mlp", None), scale=1.0 / math.sqrt(f)),
+        "wr": ini.param(f"{path}/wr", (*stack, d, d), (*L, None, None)),
+    }
+
+
+def _token_shift(x, shift_state):
+    """prev-token stream: (B,S,d) -> (B,S,d); shift_state (B,d) or None."""
+    if x.shape[1] == 1 and shift_state is not None:
+        return shift_state[:, None].astype(x.dtype)
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if shift_state is not None:
+        prev = prev.at[:, 0].set(shift_state.astype(x.dtype))
+    return prev
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, *, state=None):
+    dt_ = cfg.cdtype
+    B, S, d = x.shape
+    H, hd = rwkv6_dims(cfg)
+    shift = state["tm_shift"] if state is not None else None
+    xprev = _token_shift(x, shift)
+    dx = xprev - x
+
+    base = x + dx * p["mu_base"].astype(dt_)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["mix_w1"].astype(dt_)))
+    lora = lora.reshape(B, S, _STREAMS, _LORA_MIX)
+    mixes = p["mu"].astype(dt_)[None, None] + jnp.einsum(
+        "bsnr,nrd->bsnd", lora, p["mix_w2"].astype(dt_))
+    xr, xk, xv, xw, xg = [x + dx * mixes[:, :, i] for i in range(_STREAMS)]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt_)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt_)).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt_)).reshape(B, S, H, hd)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt_)))
+
+    w_raw = p["w0"].astype(jnp.float32)[None, None] + jnp.einsum(
+        "bsd,dr,re->bse", xw.astype(jnp.float32), p["decay_w1"].astype(jnp.float32),
+        p["decay_w2"].astype(jnp.float32))
+    g = -jnp.exp(jnp.clip(w_raw, -20.0, 2.0))          # log decay, in (-inf, 0)
+    g = jnp.clip(g, -8.0, -1e-4).reshape(B, S, H, hd)  # floor ultra-fast decays
+
+    u = p["u"]
+    if state is None:
+        y, final = gla_chunked_vector(r, k, v, g, u, chunk=16)
+        new_wkv = final
+    else:
+        yt, new_wkv = gla_step(state["wkv"], r[:, 0], k[:, 0], v[:, 0], g[:, 0],
+                               inclusive=False, u=u)
+        y = yt[:, None]
+
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = (yf.reshape(B, S, d) * p["ln_scale"].astype(jnp.float32)).astype(dt_)
+
+    out = jnp.einsum("bsd,de->bse", y * gate, p["wo"].astype(dt_))
+    new_state = None
+    if state is not None:
+        new_state = {"tm_shift": x[:, -1].astype(state["tm_shift"].dtype), "wkv": new_wkv}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p, x, cfg: ModelConfig, *, state=None):
+    dt_ = cfg.cdtype
+    shift = state["cm_shift"] if state is not None else None
+    xprev = _token_shift(x, shift)
+    dx = xprev - x
+    xk = x + dx * p["mu_k"].astype(dt_)
+    xr = x + dx * p["mu_r"].astype(dt_)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt_))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt_))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt_)))
+    new_state = None if state is None else {"cm_shift": x[:, -1].astype(state["cm_shift"].dtype)}
+    return r * v, new_state
+
+
+def rwkv6_state(cfg: ModelConfig, B: int):
+    H, hd = rwkv6_dims(cfg)
+    return {
+        "tm_shift": jnp.zeros((B, cfg.d_model), cfg.cdtype),
+        "cm_shift": jnp.zeros((B, cfg.d_model), cfg.cdtype),
+        "wkv": jnp.zeros((B, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,101 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs the pure-jnp
+oracle across shape/dtype sweeps, plus hypothesis property sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.sched_energy import sched_violation
+from repro.kernels.usl_runtime import usl_runtime
+from repro.kernels import ops
+
+
+SHAPES = [(1, 1, 1, 16), (4, 7, 4, 100), (8, 33, 2, 256), (2, 130, 3, 300),
+          (16, 5, 1, 64), (3, 128, 8, 128)]
+
+
+@pytest.mark.parametrize("B,J,M,T", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sched_violation_matches_ref(B, J, M, T, dtype):
+    rng = np.random.default_rng(B * 1000 + J)
+    start = jnp.asarray(rng.uniform(0, T * 0.9, (B, J)), dtype)
+    dur = jnp.asarray(rng.uniform(1, T * 0.3, (B, J)), dtype)
+    dem = jnp.asarray(rng.uniform(0, 4, (B, M, J)), dtype)
+    caps = jnp.asarray(rng.uniform(2, 10, (M,)), jnp.float32)
+    r = ref.sched_violation_ref(start, dur, dem, caps, T)
+    k = sched_violation(start, dur, dem, caps, T=T, interpret=True)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                               rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), B=st.integers(1, 6), J=st.integers(1, 40),
+       M=st.integers(1, 5), T=st.sampled_from([32, 100, 200]))
+def test_sched_violation_property(seed, B, J, M, T):
+    rng = np.random.default_rng(seed)
+    start = jnp.asarray(rng.uniform(0, T, (B, J)), jnp.float32)
+    dur = jnp.asarray(rng.uniform(0.5, T * 0.5, (B, J)), jnp.float32)
+    dem = jnp.asarray(rng.uniform(0, 3, (B, M, J)), jnp.float32)
+    caps = jnp.asarray(rng.uniform(1, 8, (M,)), jnp.float32)
+    r = ref.sched_violation_ref(start, dur, dem, caps, T)
+    k = sched_violation(start, dur, dem, caps, T=T, interpret=True)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                               rtol=2e-5, atol=2e-4)
+    # violations are nonnegative and zero when capacity is infinite
+    assert (np.asarray(k) >= 0).all()
+    k_inf = sched_violation(start, dur, dem, jnp.full((M,), 1e9), T=T,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(k_inf), 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1,), (100,), (7, 13), (1025,), (4, 8, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_usl_runtime_matches_ref(shape, dtype):
+    rng = np.random.default_rng(42)
+    n = jnp.asarray(rng.integers(1, 64, shape), dtype)
+    a = jnp.asarray(rng.uniform(0, 0.2, shape), dtype)
+    b = jnp.asarray(rng.uniform(0, 0.01, shape), dtype)
+    g = jnp.asarray(rng.uniform(0.5, 3, shape), dtype)
+    w = jnp.asarray(rng.uniform(10, 1000, shape), dtype)
+    r = ref.usl_runtime_ref(n, a, b, g, w)
+    k = usl_runtime(n, a, b, g, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_schedule_objective_penalizes_violations():
+    """ops.schedule_objective: violating precedence or capacity must raise
+    energy; a feasible schedule's energy equals the pure blend."""
+    B, J, M, T = 3, 4, 1, 64
+    dur = jnp.asarray([[8.0, 8, 8, 8]] * B)
+    dem = jnp.ones((B, M, J))
+    caps = jnp.asarray([2.0])
+    costs = jnp.asarray([10.0] * B)
+    edges = jnp.asarray([[0, 1]], jnp.int32)
+    # b0 feasible (serial pairs), b1 precedence violated, b2 capacity violated
+    start = jnp.asarray([[0.0, 8, 0, 8],
+                         [4.0, 0, 16, 24],
+                         [0.0, 8, 0, 0]])
+    start = start.at[2, 2].set(0.0).at[2, 3].set(0.0).at[2, 0].set(0.0)
+    e, mk, viol, prec = ops.schedule_objective(
+        start, dur, dem, caps, costs, edges, 0.5, 32.0, 10.0, T=T)
+    assert float(viol[0]) == 0 and float(prec[0]) == 0
+    assert float(prec[1]) > 0
+    assert float(viol[2]) > 0
+    assert float(e[1]) > float(e[0]) and float(e[2]) > float(e[0])
+
+
+def test_ops_pallas_and_ref_paths_agree():
+    rng = np.random.default_rng(0)
+    B, J, M, T = 4, 9, 2, 96
+    start = jnp.asarray(rng.uniform(0, 60, (B, J)), jnp.float32)
+    dur = jnp.asarray(rng.uniform(1, 20, (B, J)), jnp.float32)
+    dem = jnp.asarray(rng.uniform(0, 2, (B, M, J)), jnp.float32)
+    caps = jnp.asarray([3.0, 4.0])
+    a = ops.sched_violation(start, dur, dem, caps, T=T, use_pallas=False)
+    b = ops.sched_violation(start, dur, dem, caps, T=T, use_pallas=True,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

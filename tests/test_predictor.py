@@ -1,0 +1,83 @@
+"""Predictor layer: Ernest NNLS, USL calibration, option generation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.catalog import paper_cluster
+from repro.core.predictor import (ErnestPredictor, USLCurve, ernest_select,
+                                  RooflinePredictor, RooflineRecord,
+                                  profile_options)
+from repro.cluster.workloads import JOB_PROFILES
+
+
+def test_ernest_nnls_recovers_model():
+    """Data generated from the Ernest model itself is fit near-exactly."""
+    theta = np.asarray([5.0, 120.0, 2.0, 0.3])
+    n = np.asarray([1, 2, 4, 6, 8, 12, 16], float)
+    X = np.stack([np.ones_like(n), 1 / n, np.log(n), n], 1)
+    y = X @ theta
+    pred = ErnestPredictor.fit(n, y)
+    rel = np.abs(pred.predict(n) - y) / y
+    assert rel.max() < 0.05
+    assert (pred.theta >= 0).all()
+
+
+def test_ernest_error_band_on_usl_truth():
+    """<20% mean error on held-out counts (the paper's Ernest claim)."""
+    curve = JOB_PROFILES["airline-delay"].curves["m5.4xlarge"]
+    train_n = [1, 2, 4, 8, 16]
+    pred = ErnestPredictor.fit(train_n, curve.runtime(np.asarray(train_n)))
+    test_n = np.asarray([3, 6, 10, 12])
+    rel = np.abs(pred.predict(test_n) - curve.runtime(test_n)) / curve.runtime(test_n)
+    assert rel.mean() < 0.20
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0, 0.3), beta=st.floats(0, 0.02),
+       n0=st.sampled_from([2.0, 4.0, 8.0]),
+       t0=st.floats(10.0, 1000.0))
+def test_usl_fit_gamma_calibrates_prior_run(alpha, beta, n0, t0):
+    curve = USLCurve.fit_gamma(alpha, beta, n0, t0)
+    assert curve.runtime(n0) == pytest.approx(t0, rel=1e-9)
+    # throughput positive and finite over the grid
+    x = curve.throughput(np.asarray([1, 2, 4, 8, 16, 32, 64]))
+    assert (x > 0).all() and np.isfinite(x).all()
+
+
+def test_usl_negative_scaling_representable():
+    """beta > 0 produces a runtime minimum then negative scaling (Fig. 2
+    Sentiment-Analysis behaviour)."""
+    curve = USLCurve(alpha=0.08, beta=0.02, gamma=1.0, work=100.0)
+    r = curve.runtime(np.asarray([1, 2, 4, 8, 16, 32, 64]))
+    m = int(np.argmin(r))
+    assert 0 < m < 6 and r[-1] > r[m]
+
+
+def test_profile_options_grid_and_costs():
+    cluster = paper_cluster()
+    opts = profile_options(JOB_PROFILES["index-analysis"], cluster,
+                           counts=(1, 2, 4))
+    assert len(opts) == 4 * 3  # 4 types x 3 counts
+    for o in opts:
+        m = int(np.argmax(np.asarray(o.demands) > 0))
+        n = o.demands[m]
+        assert o.cost == pytest.approx(
+            o.duration * n * cluster.types[m].price_per_sec, rel=1e-9)
+
+
+def test_ernest_select_goals():
+    cluster = paper_cluster()
+    opts = profile_options(JOB_PROFILES["index-analysis"], cluster)
+    i_rt = ernest_select(opts, "runtime")
+    i_c = ernest_select(opts, "cost")
+    assert opts[i_rt].duration <= min(o.duration for o in opts) + 1e-9
+    assert opts[i_c].cost <= min(o.cost for o in opts) + 1e-9
+
+
+def test_roofline_predictor_scaling():
+    rp = RooflinePredictor()
+    rp.add("yi-6b/train_4k", RooflineRecord(flops=1e18, bytes_hbm=1e15,
+                                            bytes_collective=1e12, chips=256))
+    t256 = rp.predict("yi-6b/train_4k")
+    t64 = rp.predict("yi-6b/train_4k", chips=64)
+    assert t64 > t256  # fewer chips -> slower

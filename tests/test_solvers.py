@@ -1,0 +1,143 @@
+"""Solver correctness: exact == exhaustive on tiny instances; SGS schedule
+invariants as hypothesis properties; annealers produce valid plans that
+dominate or match the default baseline on energy."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.catalog import Cluster, InstanceType, paper_cluster
+from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.baselines import airflow_plan, milp_ernest_plan
+from repro.core.dag import DAG, FlatProblem, Task, TaskOption, flatten
+from repro.core.exact import solve_exact
+from repro.core.ising import IsingConfig, ising_anneal
+from repro.core.objectives import Goal
+from repro.core.sgs import schedule_cost, sgs_schedule, validate_schedule
+from repro.core.vectorized import VecConfig, vectorized_anneal
+
+
+def _random_problem(rng, J=5, M=2, opts=1, edge_p=0.4):
+    caps = rng.uniform(2, 5, M)
+    tasks = []
+    for j in range(J):
+        options = []
+        for o in range(opts):
+            d = float(rng.uniform(1, 10))
+            dem = tuple(float(x) for x in rng.uniform(0, caps * 0.8, M))
+            options.append(TaskOption(f"o{o}", d, dem, d * sum(dem)))
+        tasks.append(Task(f"t{j}", options))
+    edges = [(a, b) for a in range(J) for b in range(a + 1, J)
+             if rng.random() < edge_p]
+    dag = DAG("r", tasks, edges)
+    cluster = Cluster(tuple(InstanceType(f"r{m}", 1, 1, 3.6) for m in range(M)),
+                      tuple(int(c) for c in np.ceil(caps)))
+    prob = flatten([dag], M)
+    return prob, np.asarray(np.ceil(caps), float)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_exact_solver_is_optimal_vs_exhaustive(seed):
+    """B&B must equal min makespan over ALL precedence-feasible serial-SGS
+    orders (which contain an optimal active schedule)."""
+    rng = np.random.default_rng(seed)
+    J = int(rng.integers(3, 6))
+    prob, caps = _random_problem(rng, J=J)
+    oi = np.zeros(J, np.int64)
+    s, f, proven = solve_exact(prob, oi, caps)
+    assert proven
+    best = math.inf
+    dur, dem, _, _ = prob.option_arrays()
+    for perm in itertools.permutations(range(J)):
+        pr = np.zeros(J)
+        for rank, j in enumerate(perm):
+            pr[j] = J - rank
+        ss, ff = sgs_schedule(prob, oi, priority=pr, caps=caps)
+        best = min(best, float(ff.max()))
+    assert float(f.max()) <= best + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_sgs_invariants(seed):
+    """Every SGS schedule satisfies precedence, capacity, release times."""
+    rng = np.random.default_rng(seed)
+    J = int(rng.integers(3, 12))
+    prob, caps = _random_problem(rng, J=J, M=int(rng.integers(1, 4)))
+    pr = rng.normal(size=J)
+    oi = np.zeros(J, np.int64)
+    s, f = sgs_schedule(prob, oi, priority=pr, caps=caps)
+    errs = validate_schedule(prob, oi, s, f, caps)
+    assert not errs, errs
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_cost_is_schedule_independent(seed):
+    rng = np.random.default_rng(seed)
+    prob, caps = _random_problem(rng, J=6, M=2)
+    prices = np.asarray([0.001, 0.002])
+    oi = np.zeros(6, np.int64)
+    c1 = schedule_cost(prob, oi, prices)
+    # different priority -> same cost
+    for _ in range(3):
+        c2 = schedule_cost(prob, oi, prices)
+        assert c1 == c2
+
+
+def _paper_problem():
+    from repro.cluster.workloads import dag1
+    cluster = paper_cluster()
+    return flatten([dag1(cluster)], cluster.num_resources), cluster
+
+
+def test_anneal_beats_or_matches_baseline_energy():
+    prob, cluster = _paper_problem()
+    ref = reference_point(prob, cluster)
+    goal = Goal.balanced()
+    sol = anneal(prob, cluster, goal, AnnealConfig(seed=0), ref)
+    assert not validate_schedule(prob, sol.option_idx, sol.start, sol.finish,
+                                 cluster.caps)
+    base_e = goal.energy(*ref, *ref)   # == 0
+    assert sol.energy <= base_e + 1e-9
+    # and beats the separate baseline's energy (the paper's core claim)
+    sep = milp_ernest_plan(prob, cluster, "balanced")
+    sep_e = goal.energy(sep.makespan, sep.cost, *ref)
+    assert sol.energy <= sep_e + 1e-6
+
+
+def test_vectorized_and_ising_produce_valid_competitive_plans():
+    prob, cluster = _paper_problem()
+    ref = reference_point(prob, cluster)
+    goal = Goal.balanced()
+    vec = vectorized_anneal(prob, cluster, goal,
+                            VecConfig(chains=64, iters=250, seed=0), ref)
+    isn = ising_anneal(prob, cluster, goal,
+                       IsingConfig(chains=128, iters=400, seed=0), ref)
+    for sol in (vec, isn):
+        assert not validate_schedule(prob, sol.option_idx, sol.start,
+                                     sol.finish, cluster.caps)
+        assert sol.energy < -0.2   # substantial improvement over default
+
+
+def test_budget_constraints_respected():
+    prob, cluster = _paper_problem()
+    ref = reference_point(prob, cluster)
+    goal = Goal(w=1.0, cost_budget=6.0)
+    sol = anneal(prob, cluster, goal, AnnealConfig(seed=0), ref)
+    assert sol.cost <= 6.0 + 1e-9
+
+
+def test_multi_dag_release_times():
+    from repro.cluster.workloads import synth_trace
+    from repro.cluster.catalog import alibaba_cluster
+    cluster = alibaba_cluster(machines=10)
+    dags = synth_trace(3, cluster, seed=1)
+    prob = flatten(dags, cluster.num_resources)
+    sol = airflow_plan(prob, cluster)
+    assert not validate_schedule(prob, sol.option_idx, sol.start, sol.finish,
+                                 cluster.caps)
+    assert (sol.start >= prob.release - 1e-9).all()

@@ -1,0 +1,224 @@
+"""Data pipeline, checkpointing, optimizer, and flow-executor tests —
+including the fault-tolerance paths (retry, speculation, restart, replan)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_determinism_and_resume():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, seed=9)
+    p1 = TokenPipeline(cfg)
+    ref = [next(p1) for _ in range(6)]
+    # resume from step 3 reproduces batches 3..5 exactly
+    p2 = TokenPipeline(cfg)
+    p2.load_state_dict({"step": 3})
+    for i in range(3, 6):
+        b = next(p2)
+        np.testing.assert_array_equal(b["tokens"], ref[i]["tokens"])
+        np.testing.assert_array_equal(b["labels"], ref[i]["labels"])
+
+
+def test_pipeline_prefetch_matches_sync():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=2, seed=1)
+    sync = TokenPipeline(cfg)
+    ref = [next(sync) for _ in range(4)]
+    pre = TokenPipeline(cfg).start()
+    try:
+        for i in range(4):
+            np.testing.assert_array_equal(next(pre)["tokens"],
+                                          ref[i]["tokens"])
+    finally:
+        pre.stop()
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    """Two hosts see disjoint halves of the global batch."""
+    full = TokenPipeline(DataConfig(vocab_size=64, seq_len=16, global_batch=4,
+                                    seed=3))
+    h0 = TokenPipeline(DataConfig(vocab_size=64, seq_len=16, global_batch=4,
+                                  seed=3, num_hosts=2, host_id=0))
+    h1 = TokenPipeline(DataConfig(vocab_size=64, seq_len=16, global_batch=4,
+                                  seed=3, num_hosts=2, host_id=1))
+    fb = next(full)["tokens"]
+    np.testing.assert_array_equal(next(h0)["tokens"], fb[:2])
+    np.testing.assert_array_equal(next(h1)["tokens"], fb[2:])
+
+
+def test_labels_are_shifted_tokens():
+    p = TokenPipeline(DataConfig(vocab_size=64, seq_len=16, global_batch=2))
+    b = p.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                  "d": [jnp.ones((2,)), jnp.zeros((3,), jnp.bfloat16)]}}
+
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree(0)
+    ck.save(7, {"params": t}, extra={"data": {"step": 7}})
+    step, trees, extra = ck.restore({"params": _tree(1)})
+    assert step == 7 and extra == {"data": {"step": 7}}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(trees["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"p": _tree(s)}, blocking=False)
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_train_restart_is_exact(tmp_path):
+    """Kill training mid-run (injected preemption), restart from checkpoint,
+    final params match an uninterrupted run bit-for-bit."""
+    from repro.launch.train import train
+    kw = dict(arch="smollm-360m", smoke=True, steps=8, batch=2, seq=16,
+              lr=1e-3, ckpt_every=4, seed=5, quiet=True)
+    ref = train(**kw)  # uninterrupted
+    ckpt_dir = str(tmp_path / "ck")
+    with pytest.raises(RuntimeError, match="preemption"):
+        train(ckpt_dir=ckpt_dir, die_at_step=6, **kw)
+    out = train(ckpt_dir=ckpt_dir, **kw)  # resumes from step 4
+    assert out["steps_run"] == 4  # 8 - 4 resumed steps
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=100)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw.init(params, cfg)
+    for _ in range(60):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw.update(params, grads, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.5
+
+
+def test_grad_clip_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                            warmup_steps=0, total_steps=10)
+    params = {"x": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    _, _, metrics = adamw.update(params, {"x": jnp.asarray([1e6, 0, 0])},
+                                 state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_int8_compression_error_feedback():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(256,)) * 3)
+    err = jnp.zeros_like(g)
+    total_deq = jnp.zeros_like(g)
+    for _ in range(4):
+        q, scale, err = adamw.compress_int8(g, err)
+        total_deq = total_deq + q.astype(jnp.float32) * scale
+    # error feedback: accumulated dequantized gradient converges to 4*g
+    rel = float(jnp.linalg.norm(total_deq - 4 * g) / jnp.linalg.norm(4 * g))
+    assert rel < 0.02
+
+
+# ---------------------------------------------------------------------------
+# flow executor
+# ---------------------------------------------------------------------------
+
+
+def _plan():
+    from repro.cluster.catalog import paper_cluster
+    from repro.cluster.workloads import dag1
+    from repro.core.agora import Agora
+    from repro.core.objectives import Goal
+    from repro.core.annealer import AnnealConfig
+    cluster = paper_cluster()
+    ag = Agora(cluster, Goal.balanced(),
+               anneal_cfg=AnnealConfig(min_iters=100, max_iters=150, seed=0))
+    return ag, ag.plan([dag1(cluster)])
+
+
+def test_flow_runs_plan_faithfully():
+    from repro.flow.executor import FlowConfig, FlowRunner
+    _, plan = _plan()
+    res = FlowRunner(plan, FlowConfig(mode="sim", speculation=False)).run()
+    assert len(res.task_finish) == plan.problem.num_tasks
+    assert res.retries == 0
+    assert abs(res.makespan - plan.makespan) / plan.makespan < 0.35
+
+
+def test_flow_retries_failures():
+    from repro.flow.executor import FlowConfig, FlowRunner
+    _, plan = _plan()
+    res = FlowRunner(plan, FlowConfig(mode="sim", failure_rate=0.3, seed=1,
+                                      speculation=False)).run()
+    assert res.retries > 0
+    assert len(res.task_finish) == plan.problem.num_tasks
+
+
+def test_flow_speculative_straggler_mitigation():
+    from repro.flow.executor import FlowConfig, FlowRunner
+    _, plan = _plan()
+    cfg = FlowConfig(mode="sim", straggler_rate=0.5, straggler_slowdown=10.0,
+                     speculate_factor=1.5, seed=2)
+    res_spec = FlowRunner(plan, cfg).run()
+    import dataclasses
+    res_nospec = FlowRunner(plan, dataclasses.replace(cfg, speculation=False)).run()
+    assert res_spec.speculations > 0
+    assert res_spec.makespan <= res_nospec.makespan  # speculation helps
+
+
+def test_flow_restart_from_state(tmp_path):
+    from repro.flow.executor import FlowConfig, FlowRunner
+    _, plan = _plan()
+    state = str(tmp_path / "wf.json")
+    r1 = FlowRunner(plan, FlowConfig(mode="sim", state_path=state))
+    res1 = r1.run()
+    # restart: all tasks already done -> nothing re-runs
+    r2 = FlowRunner(plan, FlowConfig(mode="sim", state_path=state))
+    res2 = r2.run()
+    assert len(res2.task_start) == len(res1.task_start)
+    assert not any("launch" in e for e in res2.events[1:])
+
+
+def test_elastic_replan_smaller_cluster():
+    from repro.cluster.catalog import Cluster
+    ag, plan = _plan()
+    smaller = Cluster(plan.cluster.types,
+                      tuple(max(int(c // 2), 1) for c in plan.cluster.capacities))
+    re = ag.replan(plan, now=100.0, done=[0], cluster=smaller)
+    assert re.problem.num_tasks == plan.problem.num_tasks - 1
+    assert not re.validate()
+    # demands fit the smaller capacities
+    dur, dem, _, _ = re.problem.option_arrays()
+    oi = re.solution.option_idx
+    chosen = dem[np.arange(len(oi)), oi]
+    assert (chosen <= np.asarray(smaller.caps) + 1e-9).all()

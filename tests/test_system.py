@@ -1,0 +1,137 @@
+"""End-to-end system behaviour: the paper's claims as assertions, plus a
+subprocess mini dry-run (8 placeholder devices) validating the multi-pod
+lowering path and collective parsing without touching this process's jax."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.cluster.catalog import paper_cluster
+from repro.cluster.workloads import dag1, dag2
+from repro.core import baselines as bl
+from repro.core.agora import Agora
+from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.dag import flatten
+from repro.core.objectives import Goal
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def paper_setup():
+    cluster = paper_cluster()
+    probs = {d.name: flatten([d], cluster.num_resources)
+             for d in (dag1(cluster), dag2(cluster))}
+    refs = {k: reference_point(p, cluster) for k, p in probs.items()}
+    return cluster, probs, refs
+
+
+def test_cost_goal_reaches_band(paper_setup):
+    """Paper: cost goal cuts cost by ~70-78% vs default Airflow."""
+    cluster, probs, refs = paper_setup
+    for name, prob in probs.items():
+        sol = anneal(prob, cluster, Goal.cost(), AnnealConfig(seed=0),
+                     refs[name])
+        reduction = 1 - sol.cost / refs[name][1]
+        assert reduction > 0.5, (name, reduction)
+
+
+def test_runtime_goal_improves_makespan(paper_setup):
+    """Paper: runtime goal improves makespan 36-45% vs Airflow (ours is
+    larger because the default configs negative-scale; assert the band
+    floor)."""
+    cluster, probs, refs = paper_setup
+    for name, prob in probs.items():
+        sol = anneal(prob, cluster, Goal.runtime(), AnnealConfig(seed=0),
+                     refs[name])
+        imp = 1 - sol.makespan / refs[name][0]
+        assert imp > 0.36, (name, imp)
+
+
+def test_cooptimization_beats_separate_on_energy(paper_setup):
+    """The paper's central claim (Fig. 8): co-optimization >= separate."""
+    cluster, probs, refs = paper_setup
+    goal = Goal.balanced()
+    for name, prob in probs.items():
+        co = anneal(prob, cluster, goal, AnnealConfig(seed=0), refs[name])
+        sep = bl.agora_separate_plan(prob, cluster, goal)
+        e_co = goal.energy(co.makespan, co.cost, *refs[name])
+        e_sep = goal.energy(sep.makespan, sep.cost, *refs[name])
+        assert e_co <= e_sep + 1e-6, (name, e_co, e_sep)
+
+
+def test_goal_weight_monotonicity(paper_setup):
+    """Fig. 9: increasing w trades cost for makespan (weak monotonicity on
+    the endpoints)."""
+    cluster, probs, refs = paper_setup
+    prob, ref = probs["DAG1"], refs["DAG1"]
+    cost_sol = anneal(prob, cluster, Goal.cost(), AnnealConfig(seed=0), ref)
+    bal_sol = anneal(prob, cluster, Goal.balanced(), AnnealConfig(seed=0), ref)
+    rt_sol = anneal(prob, cluster, Goal.runtime(), AnnealConfig(seed=0), ref)
+    assert cost_sol.cost <= bal_sol.cost <= rt_sol.cost * 1.05
+    assert rt_sol.makespan <= bal_sol.makespan <= cost_sol.makespan
+
+
+def test_agora_plan_api_and_validation(paper_setup):
+    cluster, _, _ = paper_setup
+    plan = Agora(cluster, Goal.balanced(),
+                 anneal_cfg=AnnealConfig(min_iters=150, max_iters=200)) \
+        .plan([dag1(cluster), dag2(cluster)])
+    assert plan.validate() == []
+    comps = plan.per_dag_completion()
+    assert set(comps) == {"DAG1", "DAG2"}
+    assert len(plan.config_labels()) == plan.problem.num_tasks
+
+
+MINI_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json
+    import jax
+    import repro.launch.mesh as lm
+    import repro.launch.dryrun as dr
+
+    def mk(multi_pod=False):
+        return lm._mk((2, 2, 2) if multi_pod else (4, 2),
+                      ("pod", "data", "model") if multi_pod else ("data", "model"))
+    dr.make_production_mesh = mk
+
+    import repro.configs as rc
+    orig = rc.get_config
+    def small(a, smoke=False):
+        c = orig(a, smoke)
+        return c.replace(num_layers=2, first_dense=min(c.first_dense, 1),
+                         cross_attn_every=min(c.cross_attn_every, 2) or 0,
+                         shared_attn_every=min(c.shared_attn_every, 2) or 0)
+    dr.get_config = small
+
+    out = []
+    for arch in ["smollm-360m", "olmoe-1b-7b", "rwkv6-3b"]:
+        for mp in (False, True):
+            rec = dr.run_cell(arch, "train_4k", mp)
+            row = {k: rec[k] for k in
+                   ("arch", "mesh", "status", "collective_total") if k in rec}
+            row["err"] = rec.get("error", "")
+            out.append(row)
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    """8 placeholder devices: lowering+compiling on (4,2) and (2,2,2) meshes
+    succeeds for three families and produces nonzero collective traffic."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run([sys.executable, "-c", MINI_DRYRUN], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert res.returncode == 0, res.stderr[-3000:]
+    recs = json.loads(res.stdout.strip().splitlines()[-1])
+    assert len(recs) == 6
+    for r in recs:
+        assert r["status"] == "ok", r
+        assert r["collective_total"] > 0, r
