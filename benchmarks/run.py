@@ -24,6 +24,8 @@ SUITES = {
     "fig10": ("benchmarks.bench_overhead", "Fig. 10 overhead"),
     "macro": ("benchmarks.bench_macro", "Fig. 11 Alibaba-like macro"),
     "solver": ("benchmarks.bench_solver_perf", "§5.4 solver parallelization"),
+    "multitenant": ("benchmarks.bench_multi_tenant",
+                    "batched multi-tenant planner throughput"),
     "ablation": ("benchmarks.bench_ablation", "beyond-paper ablations"),
 }
 

@@ -1,0 +1,60 @@
+"""Version-adaptive JAX shims.
+
+The codebase targets the modern API (``jax.shard_map(check_vma=...)``,
+``jax.make_mesh(axis_types=...)``) but must also run on jax 0.4.x images
+where shard_map lives in ``jax.experimental`` (``check_rep``) and
+``make_mesh`` takes no ``axis_types``. Every mesh/shard_map call site goes
+through this module so the rest of the tree can stay on one spelling.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, **kw):
+    """jax.make_mesh with explicit-Auto axis types when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names),
+                                 **kw)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (collective outputs whose
+    replication is not statically inferable), on any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def cost_analysis(compiled) -> dict:
+    """Dict-shaped ``compiled.cost_analysis()`` on any jax version (0.4.x
+    returns a per-computation list of dicts, newer versions one dict)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (newer jax) or the psum(1) idiom (0.4.x)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh`` when available, else the Mesh context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh if hasattr(mesh, "__enter__") else contextlib.nullcontext()

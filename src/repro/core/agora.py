@@ -21,7 +21,8 @@ from repro.core.annealer import AnnealConfig, anneal, reference_point
 from repro.core.dag import DAG, FlatProblem, flatten
 from repro.core.objectives import Goal, Solution
 from repro.core.sgs import validate_schedule
-from repro.core.vectorized import VecConfig, vectorized_anneal
+from repro.core.vectorized import (VecConfig, vectorized_anneal,
+                                   vectorized_anneal_many)
 
 
 @dataclasses.dataclass
@@ -86,6 +87,40 @@ class Agora:
             from repro.core.ising import ising_anneal
             sol = ising_anneal(problem, self.cluster, self.goal, ref=ref)
         return Plan(problem, sol, self.goal, self.cluster, ref)
+
+    def plan_many(self, dags: Sequence[DAG],
+                  refs: Optional[Sequence[Tuple[float, float]]] = None,
+                  ) -> List[Plan]:
+        """Plan P independent tenant DAGs in ONE batched device solve.
+
+        The multi-tenant front door: where ``plan(dags)`` co-schedules its
+        inputs on one shared timeline, ``plan_many`` treats each DAG as an
+        isolated tenant problem and anneals all of them simultaneously —
+        the problems are pad-and-stacked and every (chain, problem) advances
+        in lockstep under a single JIT dispatch, so planning N tenants costs
+        one device round trip instead of N. Each returned ``Plan`` is
+        re-evaluated event-exactly on the host and validates independently.
+
+        Falls back to a sequential loop for host-side solvers ("anneal",
+        "ising"); the batched path requires solver="vectorized".
+        """
+        dags = list(dags)
+        if not dags:
+            return []
+        problems = [flatten([d], self.cluster.num_resources) for d in dags]
+        if refs is None:
+            refs = [reference_point(p, self.cluster) for p in problems]
+        refs = list(refs)
+        if self.solver != "vectorized" or self.mesh is not None:
+            # host-side solvers have no batched path; with a device mesh,
+            # plan() shards chains + replica-exchanges per problem — keep
+            # that behavior until the batched engine shards the problem
+            # axis too (ROADMAP: shard_map across problems)
+            return [self.plan([d], ref=r) for d, r in zip(dags, refs)]
+        sols = vectorized_anneal_many(problems, self.cluster, self.goal,
+                                      self.vec_cfg, refs)
+        return [Plan(p, s, self.goal, self.cluster, r)
+                for p, s, r in zip(problems, sols, refs)]
 
     def replan(self, plan: Plan, *, now: float,
                done: Sequence[int] = (),

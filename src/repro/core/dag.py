@@ -137,6 +137,95 @@ class FlatProblem:
         return dur, dem, cost, n
 
 
+@dataclasses.dataclass
+class PackedProblems:
+    """A list of FlatProblems pad-and-stacked into rectangular arrays.
+
+    This is the host-side half of batched multi-tenant planning: P ragged
+    problems become one (P, Jmax, ...) tensor family plus masks, so the
+    device solver can advance all of them in lockstep under a single vmap.
+    Masked task slots are inert: zero duration, zero demand, zero cost,
+    one dummy option, no edges — they can never displace a real task.
+    """
+    problems: List[FlatProblem]
+    durations: np.ndarray     # (P, Jmax, Omax) f64; 0 in masked slots
+    demands: np.ndarray       # (P, Jmax, Omax, M)
+    costs: np.ndarray         # (P, Jmax, Omax)
+    n_opts: np.ndarray        # (P, Jmax) int64; 1 in masked slots
+    num_tasks: np.ndarray     # (P,) int64 — real task count per problem
+    task_mask: np.ndarray     # (P, Jmax) bool — True for real tasks
+    pred_mask: np.ndarray     # (P, Jmax, Jmax) bool; [p, j, i] = i precedes j
+    release: np.ndarray       # (P, Jmax) f64; 0 in masked slots
+    default_option: np.ndarray  # (P, Jmax) int64; 0 in masked slots
+    num_resources: int
+
+    @property
+    def num_problems(self) -> int:
+        return len(self.problems)
+
+    @property
+    def max_tasks(self) -> int:
+        return self.task_mask.shape[1]
+
+    def unpack(self, arr: np.ndarray) -> List[np.ndarray]:
+        """Slice a (P, Jmax, ...) array back into per-problem (J_p, ...)."""
+        arr = np.asarray(arr)
+        assert arr.shape[:2] == self.task_mask.shape, arr.shape
+        return [arr[p, :int(self.num_tasks[p])]
+                for p in range(self.num_problems)]
+
+    def edges_of(self, p: int) -> List[Tuple[int, int]]:
+        return list(self.problems[p].edges)
+
+
+def pack_problems(problems: Sequence[FlatProblem],
+                  num_resources: Optional[int] = None) -> PackedProblems:
+    """Pad-and-stack P independent problems for one batched device solve."""
+    problems = list(problems)
+    assert problems, "need at least one problem"
+    if num_resources is None:
+        num_resources = problems[0].num_resources
+    assert all(pr.num_resources == num_resources for pr in problems), \
+        "all problems must share one cluster resource vector"
+    P = len(problems)
+    Jmax = max(pr.num_tasks for pr in problems)
+    Omax = max(max(len(t.options) for t in pr.tasks) for pr in problems)
+    M = num_resources
+
+    dur = np.zeros((P, Jmax, Omax))
+    dem = np.zeros((P, Jmax, Omax, M))
+    cost = np.zeros((P, Jmax, Omax))
+    n_opts = np.ones((P, Jmax), np.int64)      # masked slots: 1 dummy option
+    n_real = np.zeros(P, np.int64)
+    mask = np.zeros((P, Jmax), bool)
+    pred = np.zeros((P, Jmax, Jmax), bool)
+    release = np.zeros((P, Jmax))
+    default = np.zeros((P, Jmax), np.int64)
+
+    for p, pr in enumerate(problems):
+        J = pr.num_tasks
+        d, r, c, n = pr.option_arrays()          # (J, O_p[, M]) padded per-task
+        O = d.shape[1]
+        dur[p, :J, :O] = d
+        # option slots beyond O_p repeat the last real option (same convention
+        # as FlatProblem.option_arrays) so any in-range index decodes validly
+        dur[p, :J, O:] = d[:, -1:]
+        dem[p, :J, :O] = r
+        dem[p, :J, O:] = r[:, -1:]
+        cost[p, :J, :O] = c
+        cost[p, :J, O:] = c[:, -1:]
+        n_opts[p, :J] = n
+        n_real[p] = J
+        mask[p, :J] = True
+        for a, b in pr.edges:
+            pred[p, b, a] = True
+        release[p, :J] = pr.release
+        default[p, :J] = [t.default_option for t in pr.tasks]
+
+    return PackedProblems(problems, dur, dem, cost, n_opts, n_real, mask,
+                          pred, release, default, num_resources)
+
+
 def flatten(dags: Sequence[DAG], num_resources: int) -> FlatProblem:
     tasks: List[Task] = []
     edges: List[Tuple[int, int]] = []

@@ -10,8 +10,15 @@ work (§5.4). This module is that future work, TPU-native:
   (O(T*M), fully vectorized) — no data-dependent shapes;
 * B independent (configuration, priority) annealing chains advanced in
   lockstep under ``vmap``;
+* an OUTER vmap over P independent problems (``vectorized_anneal_many``):
+  a list of tenant DAGs is pad-and-stacked (core/dag.pack_problems) into one
+  ragged-padded batch and all B x P chains advance under one JIT / one
+  device dispatch — multi-tenant planning costs one round trip, not P;
 * optional ``shard_map`` distribution of chains over a device mesh with
   periodic best-state migration (replica exchange) via collectives.
+
+The single-problem entry point is the P=1 special case of the batched
+engine, so ``Agora.plan`` and ``Agora.plan_many`` share one code path.
 
 The final incumbent is re-evaluated event-exactly on the host (sgs.py), so
 grid quantization never corrupts reported numbers.
@@ -22,7 +29,7 @@ import dataclasses
 import math
 import time
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +37,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.cluster.catalog import Cluster
-from repro.core.dag import FlatProblem
+from repro.core.dag import FlatProblem, PackedProblems, pack_problems
 from repro.core.objectives import Goal, Solution
 from repro.core.sgs import schedule_cost, sgs_schedule
 
@@ -152,9 +159,16 @@ def chain_energy(dp: DeviceProblem, goal_w, ref_M, ref_C, option_idx, priority):
 
 
 def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, cfg: VecConfig,
-             opt0, prio0, key, axis_name: Optional[str] = None):
-    """Run cfg.iters SA steps over a batch of chains (leading axis B)."""
+             opt0, prio0, key, axis_name: Optional[str] = None,
+             j_max=None):
+    """Run cfg.iters SA steps over a batch of chains (leading axis B).
+
+    ``j_max`` (traced scalar, default J) bounds mutation targets; batched
+    multi-problem solves pass the per-problem real-task count so moves never
+    land on masked padding slots."""
     B, J = opt0.shape
+    if j_max is None:
+        j_max = J
     energy_fn = jax.vmap(partial(chain_energy, dp, goal_w, ref_M, ref_C))
 
     e0, mk0, c0 = energy_fn(opt0, prio0)
@@ -166,11 +180,11 @@ def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, cfg: VecConfig,
         k = jax.random.fold_in(key, it)
         k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
         # propose: mutate one task's option; jitter one task's priority
-        j_opt = jax.random.randint(k1, (B,), 0, J)
+        j_opt = jax.random.randint(k1, (B,), 0, j_max)
         new_o = jax.random.randint(
             k2, (B,), 0, jnp.take(dp.n_opts, j_opt))
         opt = state["opt"].at[jnp.arange(B), j_opt].set(new_o)
-        j_pr = jax.random.randint(k3, (B,), 0, J)
+        j_pr = jax.random.randint(k3, (B,), 0, j_max)
         jitter = jax.random.normal(k4, (B,)) * cfg.prio_sigma
         prio = state["prio"].at[jnp.arange(B), j_pr].add(jitter)
 
@@ -222,13 +236,161 @@ def _run_sa_jit(dp_arrays, dp_static, goal_w, ref_M, ref_C, cfg, opt0, prio0, ke
     return _sa_scan(dp, goal_w, ref_M, ref_C, cfg, opt0, prio0, key)
 
 
+# ---------------------------------------------------------------------------
+# Batched multi-problem SA: P tenant problems x B chains under one JIT
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchedDeviceProblem:
+    """Device arrays for P ragged problems pad-and-stacked to (P, Jmax, ...).
+
+    Masked slots carry zero duration / zero demand / zero cost and no edges,
+    so they decode to start=0 no-ops that cannot displace a real task; per-
+    problem grid resolution ``dt`` is a traced (P,) vector because each
+    tenant's horizon is scaled to its own reference makespan.
+    """
+    dur_bins: jnp.ndarray       # (P, J, O) int32; 0 in masked slots
+    demands: jnp.ndarray        # (P, J, O, M) f32
+    costs: jnp.ndarray          # (P, J, O) f32
+    n_opts: jnp.ndarray         # (P, J) int32; 1 in masked slots
+    n_real: jnp.ndarray         # (P,) int32
+    task_mask: jnp.ndarray      # (P, J) bool
+    pred_mask: jnp.ndarray      # (P, J, J) bool
+    release_bins: jnp.ndarray   # (P, J) int32
+    caps: jnp.ndarray           # (M,) f32 — one shared cluster
+    dt: jnp.ndarray             # (P,) f32
+    T: int
+
+    @classmethod
+    def build(cls, packed: PackedProblems, cluster: Cluster,
+              ref_makespans: np.ndarray, cfg: VecConfig) -> "BatchedDeviceProblem":
+        dur = packed.durations                              # (P, J, O)
+        real_opt = packed.task_mask[:, :, None]             # (P, J, 1)
+        horizon = np.maximum(np.asarray(ref_makespans) * cfg.horizon_slack,
+                             dur.max(axis=(1, 2)) * 2.0)    # (P,)
+        dt = horizon / cfg.grid
+        bins = np.ceil(dur / dt[:, None, None]).astype(np.int32)
+        dur_bins = np.where(real_opt, np.maximum(bins, 1), 0)
+        release_bins = np.ceil(packed.release / dt[:, None]).astype(np.int32)
+        return cls(
+            dur_bins=jnp.asarray(dur_bins),
+            demands=jnp.asarray(packed.demands, jnp.float32),
+            costs=jnp.asarray(packed.costs, jnp.float32),
+            n_opts=jnp.asarray(packed.n_opts, jnp.int32),
+            n_real=jnp.asarray(packed.num_tasks, jnp.int32),
+            task_mask=jnp.asarray(packed.task_mask),
+            pred_mask=jnp.asarray(packed.pred_mask),
+            release_bins=jnp.asarray(release_bins),
+            caps=jnp.asarray(cluster.caps, jnp.float32),
+            dt=jnp.asarray(dt, jnp.float32), T=cfg.grid,
+        )
+
+
+@partial(jax.jit, static_argnames=("cfg", "T"))
+def _run_sa_many_jit(per_problem, caps, goal_w, ref_M, ref_C, cfg, T,
+                     opt0, prio0, keys):
+    """One device dispatch for all P problems: vmap of the chain-parallel SA
+    over the problem axis. ``per_problem`` leaves have leading axis P."""
+
+    def one(slices, rM, rC, o0, p0, key):
+        (dur_bins, demands, costs, n_opts, pred_mask, release_bins, dt,
+         n_real) = slices
+        dp = DeviceProblem(dur_bins, demands, costs, n_opts, pred_mask,
+                           release_bins, caps, dt, T)
+        return _sa_scan(dp, goal_w, rM, rC, cfg, o0, p0, key, j_max=n_real)
+
+    return jax.vmap(one)(per_problem, ref_M, ref_C, opt0, prio0, keys)
+
+
+# priority assigned to masked padding slots: finite (so they stay below any
+# real task and above the -inf "ineligible" sentinel) but far outside the
+# reachable range of real priorities.
+_MASKED_PRIO = -1e9
+
+
+def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
+                           goal: Goal, cfg: Optional[VecConfig] = None,
+                           refs: Optional[Sequence[Tuple[float, float]]] = None,
+                           ) -> List[Solution]:
+    """Anneal P independent problems in one batched device solve.
+
+    Returns one ``Solution`` per problem, each re-evaluated event-exactly on
+    the host. ``refs`` are per-problem (makespan, cost) reference points;
+    computed with the default scheduler when omitted.
+    """
+    cfg = cfg or VecConfig()
+    problems = list(problems)
+    t_start = time.monotonic()
+    if refs is None:
+        from repro.core.annealer import reference_point
+        refs = [reference_point(p, cluster) for p in problems]
+    refs = list(refs)
+    assert len(refs) == len(problems)
+    ref_M = np.asarray([r[0] for r in refs])
+    ref_C = np.asarray([r[1] for r in refs])
+
+    packed = pack_problems(problems, cluster.num_resources)
+    bdp = BatchedDeviceProblem.build(packed, cluster, ref_M, cfg)
+    P_n, J = packed.num_problems, packed.max_tasks
+    B = cfg.chains
+
+    key = jax.random.PRNGKey(cfg.seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    pkeys = jax.vmap(lambda p: jax.random.fold_in(k1, p))(jnp.arange(P_n))
+
+    defaults = jnp.asarray(packed.default_option, jnp.int32)    # (P, J)
+    opt0 = jnp.broadcast_to(defaults[:, None, :], (P_n, B, J)).copy()
+    # half the chains start from random configurations for diversity
+    rand_opt = jax.random.randint(k2, (P_n, B, J), 0, 1_000_000) \
+        % bdp.n_opts[:, None, :]
+    opt0 = jnp.where((jnp.arange(B) % 2 == 0)[None, :, None], opt0, rand_opt)
+    prio0 = jax.random.normal(k3, (P_n, B, J)) * cfg.prio_sigma
+    prio0 = jnp.where(bdp.task_mask[:, None, :], prio0, _MASKED_PRIO)
+
+    per_problem = (bdp.dur_bins, bdp.demands, bdp.costs, bdp.n_opts,
+                   bdp.pred_mask, bdp.release_bins, bdp.dt, bdp.n_real)
+    state = _run_sa_many_jit(per_problem, bdp.caps, goal.w,
+                             jnp.asarray(ref_M, jnp.float32),
+                             jnp.asarray(ref_C, jnp.float32),
+                             cfg, bdp.T, opt0, prio0, pkeys)
+
+    best_idx = np.asarray(jnp.argmin(state["best_e"], axis=1))     # (P,)
+    best_opt = np.asarray(state["best_opt"])                        # (P, B, J)
+    best_prio = np.asarray(state["best_prio"])
+    elapsed = time.monotonic() - t_start
+
+    sols = []
+    for p, prob in enumerate(problems):
+        Jp = prob.num_tasks
+        oi = best_opt[p, best_idx[p], :Jp].astype(np.int64)
+        pr = best_prio[p, best_idx[p], :Jp].astype(np.float64)
+        # event-exact re-evaluation on the host (removes grid quantization)
+        start, finish = sgs_schedule(prob, oi, priority=pr, caps=cluster.caps)
+        cost = schedule_cost(prob, oi, cluster.prices_per_sec)
+        mk = float(finish.max())
+        sol = Solution(oi, start, finish, mk, cost,
+                       goal.energy(mk, cost, ref_M[p], ref_C[p]),
+                       solver="agora-vectorized-many")
+        sol.solve_seconds = elapsed   # batch wall time: one dispatch for all P
+        sols.append(sol)
+    return sols
+
+
 def vectorized_anneal(problem: FlatProblem, cluster: Cluster, goal: Goal,
                       cfg: Optional[VecConfig] = None,
                       ref: Optional[Tuple[float, float]] = None,
                       mesh=None) -> Solution:
     """Batched SA; if ``mesh`` is given, chains are sharded over all its
-    devices with periodic cross-device replica exchange."""
+    devices with periodic cross-device replica exchange. The mesh-less path
+    is the P=1 case of ``vectorized_anneal_many`` — one shared code path for
+    single-DAG and multi-tenant planning."""
     cfg = cfg or VecConfig()
+    if mesh is None:
+        refs = None if ref is None else [ref]
+        sol = vectorized_anneal_many([problem], cluster, goal, cfg, refs)[0]
+        sol.solver = "agora-vectorized"
+        return sol
     t_start = time.monotonic()
     if ref is None:
         from repro.core.annealer import reference_point
@@ -251,29 +413,25 @@ def vectorized_anneal(problem: FlatProblem, cluster: Cluster, goal: Goal,
                  dp.release_bins, dp.caps)
     dp_static = (dp.dt, dp.T)
 
-    if mesh is None:
-        state = _run_sa_jit(dp_arrays, dp_static, goal.w, ref_M, ref_C, cfg,
-                            opt0, prio0, k3)
-    else:
-        n_dev = mesh.devices.size
-        assert B % n_dev == 0, (B, n_dev)
-        axis = mesh.axis_names[0]
+    n_dev = mesh.devices.size
+    assert B % n_dev == 0, (B, n_dev)
+    axis = mesh.axis_names[0]
 
-        keys = ["opt", "prio", "e", "best_opt", "best_prio", "best_e"]
+    keys = ["opt", "prio", "e", "best_opt", "best_prio", "best_e"]
 
-        def shard_fn(opt0, prio0):
-            dpl = DeviceProblem(*dp_arrays, *dp_static)
-            st = _sa_scan(dpl, goal.w, ref_M, ref_C, cfg, opt0, prio0,
-                          k3, axis_name=axis)
-            return tuple(st[k] for k in keys)  # scalars (T) stay device-local
+    def shard_fn(opt0, prio0):
+        dpl = DeviceProblem(*dp_arrays, *dp_static)
+        st = _sa_scan(dpl, goal.w, ref_M, ref_C, cfg, opt0, prio0,
+                      k3, axis_name=axis)
+        return tuple(st[k] for k in keys)  # scalars (T) stay device-local
 
-        fn = jax.jit(jax.shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(P(axis), P(axis)),
-            out_specs=(P(axis),) * 6,
-            check_vma=False))
-        vals = fn(opt0, prio0)
-        state = dict(zip(keys, vals))
+    from repro.compat import shard_map
+    fn = jax.jit(shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis),) * 6))
+    vals = fn(opt0, prio0)
+    state = dict(zip(keys, vals))
 
     best_idx = int(jnp.argmin(state["best_e"]))
     best_opt = np.asarray(state["best_opt"][best_idx], np.int64)

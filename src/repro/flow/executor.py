@@ -36,6 +36,8 @@ from repro.core.agora import Agora, Plan
 class FlowConfig:
     mode: str = "sim"                  # "sim" | "real"
     max_retries: int = 2
+    retry_backoff: float = 0.0         # base delay; doubles per attempt
+    retry_backoff_cap: float = 300.0   # ceiling on the backoff delay
     failure_rate: float = 0.0          # sim: per-attempt failure probability
     straggler_rate: float = 0.0        # sim: probability of a slow attempt
     straggler_slowdown: float = 4.0
@@ -139,6 +141,8 @@ class FlowRunner:
         seq = 0
         attempts: Dict[int, int] = {j: 0 for j in range(J)}
         running: Dict[int, List[TaskRun]] = {}
+        backing_off: set = set()           # tasks waiting out a retry delay
+        backoff_idle: Dict[int, float] = {}  # per-task accumulated delay
 
         def push(t, kind, payload):
             nonlocal seq
@@ -148,7 +152,7 @@ class FlowRunner:
         def ready_tasks():
             out = []
             for j in range(J):
-                if j in self.done or j in running:
+                if j in self.done or j in running or j in backing_off:
                     continue
                 if all(p in self.done for p in preds[j]):
                     if float(problem.release[j]) <= clock + 1e-9:
@@ -189,8 +193,11 @@ class FlowRunner:
 
         while heap:
             clock, _, kind, payload = heapq.heappop(heap)
-            if kind == "release":
+            if kind in ("release", "retry"):
+                if kind == "retry":
+                    backing_off.discard(payload)
                 if payload not in self.done and payload not in running \
+                        and payload not in backing_off \
                         and all(p in self.done for p in preds[payload]):
                     launch(payload)
                 continue
@@ -217,7 +224,18 @@ class FlowRunner:
                     raise RuntimeError(f"task {j} exceeded retries")
                 if not running[j]:
                     del running[j]
-                    launch(j)
+                    # capped exponential backoff before the next attempt
+                    delay = 0.0
+                    if cfg.retry_backoff > 0:
+                        delay = min(cfg.retry_backoff_cap,
+                                    cfg.retry_backoff * 2.0 ** (run.attempt - 1))
+                    if delay > 0:
+                        self._log(clock, f"task {j} backoff {delay:.1f}s")
+                        backing_off.add(j)
+                        backoff_idle[j] = backoff_idle.get(j, 0.0) + delay
+                        push(clock + delay, "retry", j)
+                    else:
+                        launch(j)
                 continue
             # finish
             self.done[j] = clock
@@ -235,8 +253,91 @@ class FlowRunner:
         prices = self.plan.cluster.prices_per_sec
         cost = 0.0
         for j in range(J):
-            d = self.done[j] - self.started[j]
+            # backoff windows hold no resources -> not billed
+            d = self.done[j] - self.started[j] - backoff_idle.get(j, 0.0)
             cost += float((dem_all[j, oi[j]] * prices).sum() * d)
         return FlowResult(makespan, cost, dict(self.started), dict(self.done),
                           self.retries, self.speculations, self.replans,
                           self.events)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant rolling-horizon loop (§5.5.1 serving mode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TenantRecord:
+    """Outcome for one tenant DAG across the rolling-horizon run."""
+    name: str
+    submitted: float       # original submission (release) time
+    planned_at: float      # planning-round start that batched it
+    finished: float        # virtual completion time
+    turnaround: float      # finished - submitted (queueing + execution)
+    planned_makespan: float
+    realized_makespan: float
+    cost: float
+    retries: int
+    speculations: int
+
+
+class MultiTenantRunner:
+    """Airflow-style serving loop: DAG submissions stream in; every planning
+    round batches the pending set through ``Agora.plan_many`` (ONE device
+    dispatch for the whole batch) and dispatches the resulting plans to the
+    discrete-event executor. DAGs arriving mid-round queue for the next
+    round — the re-plan trigger re-batches the still-pending set, so a burst
+    of N submissions costs one solve, not N.
+
+    Tenants are isolated: each DAG is planned and simulated against the full
+    cluster (per-tenant capacity quota), which is what lets the batch solve
+    stay embarrassingly parallel on device.
+    """
+
+    def __init__(self, agora: Agora, dags, cfg: Optional[FlowConfig] = None,
+                 window: float = 900.0):
+        self.agora = agora
+        self.dags = sorted(dags, key=lambda d: d.release_time)
+        self.cfg = cfg or FlowConfig()
+        self.window = float(window)      # min spacing of planning rounds
+        self.rounds: List[int] = []      # batch size per planning round
+        self.events: List[str] = []
+
+    def run(self) -> List[TenantRecord]:
+        pending = list(self.dags)
+        records: List[TenantRecord] = []
+        clock = 0.0
+        first = True
+        while pending:
+            earliest = min(d.release_time for d in pending)
+            clock = earliest if first else max(clock + self.window, earliest)
+            first = False
+            batch = [d for d in pending if d.release_time <= clock + 1e-9]
+            pending = [d for d in pending if d.release_time > clock + 1e-9]
+            # re-anchor each tenant's plan at the round start
+            now_dags = [dataclasses.replace(d, release_time=0.0) for d in batch]
+            plans = self.agora.plan_many(now_dags)
+            self.rounds.append(len(batch))
+            self.events.append(
+                f"[t={clock:9.1f}] round {len(self.rounds)}: planned "
+                f"{len(batch)} DAGs in one batch "
+                f"({sum(p.problem.num_tasks for p in plans)} tasks)")
+            for dag, plan in zip(batch, plans):
+                # per-tenant noise stream (seeded by the global tenant index
+                # so rounds don't replay each other's fault sequences) AND
+                # per-tenant checkpoint file — tenants must never restore
+                # each other's task indices
+                state = (f"{self.cfg.state_path}.{dag.name}"
+                         if self.cfg.state_path else None)
+                cfg_i = dataclasses.replace(
+                    self.cfg, seed=self.cfg.seed + 7919 * len(records),
+                    state_path=state)
+                res = FlowRunner(plan, cfg_i).run()
+                records.append(TenantRecord(
+                    name=dag.name, submitted=dag.release_time,
+                    planned_at=clock, finished=clock + res.makespan,
+                    turnaround=clock + res.makespan - dag.release_time,
+                    planned_makespan=plan.makespan,
+                    realized_makespan=res.makespan, cost=res.cost,
+                    retries=res.retries, speculations=res.speculations))
+        return records

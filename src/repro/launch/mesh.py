@@ -10,10 +10,7 @@ from __future__ import annotations
 
 import jax
 
-
-def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+from repro.compat import make_mesh as _mk
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,126 @@
+"""Minimal, dependency-free stand-in for ``hypothesis``.
+
+The tier-1 suite uses hypothesis for seeded property sweeps. When the real
+package is unavailable (hermetic CI images), this shim keeps the same test
+code collecting and running: each ``@given`` test is executed for
+``max_examples`` deterministic samples drawn from a PRNG seeded by the test
+name, so runs are reproducible and failures are re-triggerable.
+
+Only the strategy surface the suite actually uses is implemented
+(integers, sampled_from, floats, booleans, lists, just, tuples). Tests
+import via::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class Strategy:
+    """A sampler: draw(rng) -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return Strategy(draw)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2**31 - 1) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> Strategy:
+        seq = list(seq)
+        return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw) -> Strategy:
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def just(value) -> Strategy:
+        return Strategy(lambda rng: value)
+
+    @staticmethod
+    def lists(elements: Strategy, min_size=0, max_size=10) -> Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return Strategy(draw)
+
+    @staticmethod
+    def tuples(*strategies: Strategy) -> Strategy:
+        return Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+strategies = _Strategies()
+st = strategies
+
+
+def given(**param_strategies):
+    """Run the wrapped test for N deterministic samples of its parameters."""
+
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random((seed << 17) ^ i)
+                drawn = {k: s.draw(rng) for k, s in param_strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 - annotate and re-raise
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {drawn!r}") from e
+        # NOT functools.wraps: pytest must see the zero-arg signature, not the
+        # strategy parameters (it would hunt for fixtures named like them).
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        wrapper._fallback_max_examples = getattr(
+            fn, "_pending_max_examples", DEFAULT_MAX_EXAMPLES)
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts (a superset of) the real signature; only max_examples acts."""
+
+    def decorate(fn):
+        # works whether applied above or below @given
+        if hasattr(fn, "_fallback_max_examples"):
+            fn._fallback_max_examples = max_examples
+        else:
+            fn._pending_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -11,5 +11,5 @@ import pytest
 @pytest.fixture(scope="session")
 def mesh11():
     """Trivial (1,1) mesh with production axis names for smoke tests."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))

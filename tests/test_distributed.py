@@ -28,9 +28,7 @@ SCRIPT = textwrap.dedent("""
 
     results = {}
 
-    def mk(shape, axes):
-        return jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.compat import make_mesh as mk, mesh_context
 
     # ---- pipeline parallelism ------------------------------------------
     cfg = get_config("smollm-360m", smoke=True).replace(
@@ -45,7 +43,7 @@ SCRIPT = textwrap.dedent("""
     base, _ = jax.jit(model.loss)(params, batch)
     model_pp = Model(cfg, mesh=mesh_pp)
     pp = pp_loss_fn(model_pp, mesh_pp, n_micro=4)
-    with jax.set_mesh(mesh_pp) if hasattr(jax, "set_mesh") else mesh_pp:
+    with mesh_context(mesh_pp):
         ppl, _ = jax.jit(pp)(params, batch)
     results["pp"] = [float(base), float(ppl)]
 

@@ -1,0 +1,178 @@
+"""Flow executor fault paths: retry with capped exponential backoff,
+speculative re-execution first-finisher-wins, checkpoint-restart never
+re-running completed tasks, and the rolling-horizon multi-tenant loop."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster.catalog import alibaba_cluster
+from repro.cluster.workloads import synth_trace
+from repro.core.agora import Agora
+from repro.core.objectives import Goal
+from repro.core.vectorized import VecConfig
+from repro.flow.executor import (FlowConfig, FlowRunner, MultiTenantRunner,
+                                 TenantRecord)
+
+VEC = VecConfig(chains=16, iters=80, grid=96, seed=0)
+
+
+@pytest.fixture(scope="module")
+def planned():
+    cluster = alibaba_cluster(machines=20)
+    dags = synth_trace(1, cluster, seed=4)
+    dags[0].release_time = 0.0
+    agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                  vec_cfg=VEC)
+    return agora, agora.plan(dags)
+
+
+def test_all_tasks_complete_under_failures(planned):
+    _, plan = planned
+    cfg = FlowConfig(mode="sim", failure_rate=0.3, max_retries=8, seed=1,
+                     speculation=False)
+    res = FlowRunner(plan, cfg).run()
+    J = plan.problem.num_tasks
+    assert set(res.task_finish) == set(range(J))
+    assert res.retries > 0                     # failures actually injected
+    assert res.makespan >= plan.makespan - 1e-6
+
+
+def test_retry_backoff_delays_relaunch(planned):
+    """With backoff the relaunch is pushed by base * 2^(attempt-1), capped —
+    identical fault sequence (same seed) must finish strictly later."""
+    _, plan = planned
+    base = FlowConfig(mode="sim", failure_rate=0.3, max_retries=8, seed=1,
+                      speculation=False)
+    fast = FlowRunner(plan, base).run()
+    slow = FlowRunner(plan, dataclasses.replace(
+        base, retry_backoff=30.0, retry_backoff_cap=120.0)).run()
+    assert slow.retries == fast.retries        # same injected fault sequence
+    assert slow.makespan > fast.makespan
+    assert any("backoff" in e for e in FlowRunner(
+        plan, dataclasses.replace(base, retry_backoff=30.0)).run().events
+        if e)  # backoff events are logged
+
+
+def test_backoff_is_capped(planned):
+    _, plan = planned
+    cfg = FlowConfig(mode="sim", failure_rate=0.5, max_retries=20, seed=2,
+                     speculation=False, retry_backoff=100.0,
+                     retry_backoff_cap=150.0)
+    runner = FlowRunner(plan, cfg)
+    res = runner.run()
+    delays = [float(e.split("backoff")[1].rstrip("s").strip())
+              for e in res.events if "backoff" in e]
+    assert delays, "expected at least one backoff event"
+    assert max(delays) <= 150.0 + 1e-9
+
+
+def test_speculative_duplicate_winner(planned):
+    """A straggling attempt gets a duplicate; the first finisher wins, so
+    the realized makespan stays below the un-mitigated straggler runtime."""
+    _, plan = planned
+    cfg = FlowConfig(mode="sim", straggler_rate=0.5, straggler_slowdown=50.0,
+                     speculate_factor=1.5, speculation=True, seed=5)
+    res = FlowRunner(plan, cfg).run()
+    assert res.speculations > 0
+    no_spec = FlowRunner(plan, dataclasses.replace(
+        cfg, speculation=False)).run()
+    assert res.makespan < no_spec.makespan     # mitigation actually helps
+    J = plan.problem.num_tasks
+    assert set(res.task_finish) == set(range(J))
+
+
+def test_checkpoint_restart_never_reruns_completed(planned, tmp_path):
+    _, plan = planned
+    state = str(tmp_path / "wf.json")
+    full = FlowRunner(plan, FlowConfig(mode="sim", seed=0,
+                                       state_path=state)).run()
+    J = plan.problem.num_tasks
+    # crash-restart: the checkpoint now says everything finished
+    r2 = FlowRunner(plan, FlowConfig(mode="sim", seed=0, state_path=state))
+    res2 = r2.run()
+    launches = [e for e in res2.events if "launch task" in e]
+    assert launches == [], launches            # nothing re-ran
+    assert any("restored workflow state" in e for e in res2.events)
+    assert set(res2.task_finish) == set(range(J))
+    # partial checkpoint: only completed tasks are skipped
+    import json
+    done_half = {k: v for i, (k, v) in
+                 enumerate(sorted(full.task_finish.items())) if i < J // 2}
+    started_half = {k: full.task_start[k] for k in done_half}
+    with open(state, "w") as f:
+        json.dump({"done": done_half, "started": started_half}, f)
+    res3 = FlowRunner(plan, FlowConfig(mode="sim", seed=0,
+                                       state_path=state)).run()
+    relaunched = {int(e.split("launch task ")[1].split()[0])
+                  for e in res3.events if "launch task" in e}
+    assert relaunched == set(range(J)) - set(int(k) for k in done_half)
+
+
+def _two_task_plan():
+    """Two independent tasks, fixed durations 10s and 20s, one option each."""
+    from repro.cluster.catalog import Cluster, InstanceType
+    from repro.core.agora import Plan
+    from repro.core.dag import DAG, Task, TaskOption, flatten
+    from repro.core.objectives import Solution
+
+    cluster = Cluster((InstanceType("r0", 1, 1, 3.6),), (4,))
+    tasks = [Task("a", [TaskOption("o", 10.0, (1.0,), 10.0)]),
+             Task("b", [TaskOption("o", 20.0, (1.0,), 20.0)])]
+    prob = flatten([DAG("d", tasks, [])], 1)
+    sol = Solution(np.zeros(2, np.int64), np.zeros(2),
+                   np.asarray([10.0, 20.0]), 20.0, 30.0)
+    return Plan(prob, sol, Goal.balanced(), cluster, (20.0, 30.0))
+
+
+def test_backoff_not_bypassed_by_sibling_finish():
+    """Regression: while task A waits out its backoff, a sibling finishing
+    must NOT re-launch A early through the ready-task rescan."""
+    plan = _two_task_plan()
+
+    class FailAOnce(FlowRunner):
+        def _attempt_fails(self):
+            # first launched attempt (task A's attempt 1) fails; rest succeed
+            self._fails = getattr(self, "_fails", 0) + 1
+            return self._fails == 1
+
+    cfg = FlowConfig(mode="sim", max_retries=3, retry_backoff=100.0,
+                     retry_backoff_cap=1000.0, speculation=False)
+    res = FailAOnce(plan, cfg).run()
+    # A: fails at t=10, backoff 100 -> retry at t=110, done t=120.
+    # B finishes at t=20, inside A's window — with the bypass bug A would
+    # relaunch at t=20 and finish at t=30.
+    assert res.task_finish[0] >= 110.0 - 1e-9, res.task_finish
+    assert res.retries == 1
+    # idle backoff time is not billed: 10s (failed) + 10s (retry) + 20s (B)
+    prices = plan.cluster.prices_per_sec
+    assert res.cost == pytest.approx(float(prices[0]) * 40.0)
+
+
+def test_multi_tenant_rolling_horizon():
+    """Pending queue -> plan_many -> dispatch; later arrivals are re-batched
+    into the next round instead of getting one solve each."""
+    cluster = alibaba_cluster(machines=20)
+    dags = synth_trace(5, cluster, seed=2, submit_rate=1.0 / 300.0)
+    agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                  vec_cfg=VEC)
+    runner = MultiTenantRunner(agora, dags,
+                               FlowConfig(mode="sim", failure_rate=0.05,
+                                          retry_backoff=5.0),
+                               window=600.0)
+    records = runner.run()
+    assert len(records) == 5
+    assert sum(runner.rounds) == 5
+    assert len(runner.rounds) < 5              # batching actually happened
+    by_name = {r.name: r for r in records}
+    for d in dags:
+        r = by_name[d.name]
+        assert isinstance(r, TenantRecord)
+        assert r.planned_at >= d.release_time - 1e-9   # no time travel
+        assert r.finished >= r.planned_at
+        assert r.turnaround >= r.realized_makespan - 1e-9
+        assert r.cost > 0
+    # rounds are chronologic and spaced by >= window
+    planned_ats = sorted({r.planned_at for r in records})
+    for a, b in zip(planned_ats, planned_ats[1:]):
+        assert b - a >= 600.0 - 1e-9

@@ -3,7 +3,10 @@ TPU-native Mamba2/RWKV6 core) against the scan oracle."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.models.gla import (gla_chunked_scalar, gla_chunked_vector,
                               gla_scan_ref, gla_step)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.sched_energy import sched_violation

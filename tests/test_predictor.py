@@ -1,7 +1,10 @@
 """Predictor layer: Ernest NNLS, USL calibration, option generation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.cluster.catalog import paper_cluster
 from repro.core.predictor import (ErnestPredictor, USLCurve, ernest_select,

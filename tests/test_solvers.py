@@ -6,7 +6,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.cluster.catalog import Cluster, InstanceType, paper_cluster
 from repro.core.annealer import AnnealConfig, anneal, reference_point
