@@ -2,7 +2,6 @@
 both but separately optimized, AGORA co-optimized (balanced goal)."""
 from __future__ import annotations
 
-import time
 
 from benchmarks.common import emit
 from repro.cluster.catalog import paper_cluster

@@ -16,12 +16,10 @@ def main(seed: int = 1):
         d = dag_fn(cluster)
         prob = flatten([d], cluster.num_resources)
         ref = reference_point(prob, cluster)
-        prev_m = None
         for w in (0.0, 0.25, 0.5, 0.75, 1.0):
             sol = anneal(prob, cluster, Goal(w=w), AnnealConfig(seed=seed), ref)
             emit(f"fig9/{d.name}/w{w}", sol.solve_seconds * 1e6,
                  f"M={sol.makespan:.0f}s C=${sol.cost:.2f}")
-            prev_m = sol.makespan
 
 
 if __name__ == "__main__":

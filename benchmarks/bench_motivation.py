@@ -2,7 +2,6 @@
 (separate vs brute-force co-optimization), Fig. 4 (search-space growth)."""
 from __future__ import annotations
 
-import itertools
 import math
 import time
 
@@ -10,13 +9,12 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.cluster.catalog import paper_cluster
-from repro.cluster.workloads import JOB_PROFILES, make_task, motivation_dag
-from repro.core.baselines import airflow_plan, brute_force_plan, cp_ernest_plan
-from repro.core.dag import DAG, Task, flatten
+from repro.cluster.workloads import JOB_PROFILES, make_task
+from repro.core.baselines import brute_force_plan, cp_ernest_plan
+from repro.core.dag import DAG, flatten
 from repro.core.annealer import reference_point
 from repro.core.objectives import Goal
 from repro.core.predictor import ErnestPredictor
-from repro.core.sgs import schedule_cost
 
 
 def ernest_curves():

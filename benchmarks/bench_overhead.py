@@ -5,12 +5,10 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
 from repro.cluster.catalog import alibaba_cluster
 from repro.cluster.workloads import synth_trace
-from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.annealer import AnnealConfig, anneal
 from repro.core.baselines import airflow_plan
 from repro.core.dag import flatten
 from repro.core.objectives import Goal

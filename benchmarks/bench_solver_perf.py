@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.cluster.catalog import paper_cluster

@@ -1,0 +1,69 @@
+"""Diff two BENCH_multi_tenant.json runs and fail loudly on regression.
+
+CI archives every run's benchmark JSON as an artifact; this script compares
+the current run against the previous one and exits non-zero when planner
+throughput regressed by more than ``--max-regression`` (default 1.3x) on
+any batch size, so perf regressions in the batched/shared planning paths
+cannot land silently.  Quality (energy) and the shared-mode energy delta
+are reported as advisory context — they gate inside the benchmark itself.
+
+  python benchmarks/compare_bench.py prev.json curr.json [--max-regression 1.3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(prev: dict, curr: dict, max_regression: float) -> int:
+    status = 0
+    prev_tp = prev.get("throughput") or {}
+    curr_tp = curr.get("throughput") or {}
+    if prev.get("smoke") != curr.get("smoke"):
+        print(f"note: comparing smoke={prev.get('smoke')} baseline against "
+              f"smoke={curr.get('smoke')} run; thresholds still apply")
+    common = sorted(set(prev_tp) & set(curr_tp),
+                    key=lambda k: int(k.lstrip("P") or 0))
+    if not common:
+        print("no common throughput keys between runs; nothing to gate")
+    for key in common:
+        p, c = prev_tp[key]["dags_per_sec"], curr_tp[key]["dags_per_sec"]
+        if c <= 0:
+            print(f"FAIL {key}: current throughput is {c} dags/s")
+            status = 1
+            continue
+        ratio = p / c
+        verdict = "OK"
+        if ratio > max_regression:
+            verdict = f"FAIL (> {max_regression:.2f}x regression)"
+            status = 1
+        print(f"{key}: {p:.2f} -> {c:.2f} dags/s "
+              f"(prev/curr = {ratio:.2f}x) {verdict}")
+    p_sh, c_sh = prev.get("shared") or {}, curr.get("shared") or {}
+    if p_sh and c_sh:
+        print(f"shared energy delta (isolated - shared, higher is better): "
+              f"{p_sh.get('energy_delta'):.3f} -> "
+              f"{c_sh.get('energy_delta'):.3f} (advisory)")
+    return status
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="previous run's BENCH_multi_tenant.json")
+    ap.add_argument("curr", help="current run's BENCH_multi_tenant.json")
+    ap.add_argument("--max-regression", type=float, default=1.3,
+                    help="fail when prev/curr throughput exceeds this ratio")
+    args = ap.parse_args(argv)
+    status = compare(load(args.prev), load(args.curr), args.max_regression)
+    print("benchmark trend gate:", "PASS" if status == 0 else "FAIL")
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -4,8 +4,16 @@ batched device solve (``Agora.plan_many``) and executed in the discrete-event
 simulator with injected failures + stragglers; a joint co-scheduled plan and
 an elastic re-plan after capacity loss round out the §5.5.1 triggers.
 
+With ``--shared`` the serving loop switches to the shared-capacity model:
+the batch is planned against ONE global capacity vector
+(``plan_many(shared_capacity=True)``), dispatched as a single joint
+workflow drawing from one pool, and replanned when the pool drains or new
+tenants arrive.
+
   PYTHONPATH=src python examples/multi_tenant.py
+  PYTHONPATH=src python examples/multi_tenant.py --shared
 """
+import argparse
 import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -19,8 +27,16 @@ from repro.cluster.workloads import synth_trace
 from repro.flow.executor import FlowConfig, FlowRunner, MultiTenantRunner
 
 
-def main():
-    cluster = alibaba_cluster(machines=40)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shared", action="store_true",
+                    help="serve tenants from ONE shared capacity pool "
+                         "(coupled co-scheduling) instead of per-tenant "
+                         "quotas")
+    args = ap.parse_args(argv)
+
+    machines = 6 if args.shared else 40    # shared mode: make capacity bind
+    cluster = alibaba_cluster(machines=machines)
     dags = synth_trace(8, cluster, seed=7, submit_rate=1.0 / 90.0)
 
     agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
@@ -30,15 +46,22 @@ def main():
     cfg = FlowConfig(mode="sim", failure_rate=0.05, straggler_rate=0.08,
                      straggler_slowdown=5.0, speculation=True, seed=3,
                      noise_sigma=0.08, retry_backoff=10.0)
-    runner = MultiTenantRunner(agora, dags, cfg, window=900.0)
+    runner = MultiTenantRunner(agora, dags, cfg, window=900.0,
+                               shared_cluster=args.shared)
     records = runner.run()
+    mode = "shared-capacity pool" if args.shared else "per-tenant quotas"
     print(f"served {len(records)} tenant DAGs in {len(runner.rounds)} "
-          f"planning rounds (batch sizes {runner.rounds}) — each round is "
-          f"one device dispatch")
+          f"planning rounds (batch sizes {runner.rounds}, {mode}) — each "
+          f"round is one device dispatch")
     for r in records:
         print(f"  {r.name}: submitted t={r.submitted:6.0f}s  "
               f"turnaround {r.turnaround:6.0f}s  cost ${r.cost:.2f}  "
-              f"retries={r.retries} spec={r.speculations}")
+              f"retries={r.retries} spec={r.speculations}"
+              f"{'  [FAILED]' if r.failed else ''}")
+    if args.shared:
+        for e in runner.events:
+            if "joint dispatch" in e or "re-planned" in e:
+                print(f"  {e}")
 
     # --- joint co-scheduled plan (one shared timeline) vs baseline --------
     plan = agora.plan(dags)

@@ -8,7 +8,7 @@ per instance type, capacity in instances, price per instance-hour.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -10,12 +10,11 @@ Alibaba-like trace generator implements the §5.5.1 recipe (USL with random
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.cluster.catalog import AWS_M5, Cluster, paper_cluster
+from repro.cluster.catalog import Cluster, paper_cluster
 from repro.core.dag import DAG, Task, TaskOption
 from repro.core.predictor import TaskProfile, USLCurve, profile_options
 

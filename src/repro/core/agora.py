@@ -10,19 +10,19 @@ node loss, straggler re-estimation).
 from __future__ import annotations
 
 import dataclasses
-import math
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.cluster.catalog import Cluster
 from repro.core.annealer import AnnealConfig, anneal, reference_point
-from repro.core.dag import DAG, FlatProblem, flatten
+from repro.core.dag import DAG, FlatProblem, concat_problems, flatten
 from repro.core.objectives import Goal, Solution
-from repro.core.sgs import validate_schedule
+from repro.core.sgs import (schedule_cost, validate_schedule,
+                            validate_schedule_many)
 from repro.core.vectorized import (VecConfig, vectorized_anneal,
-                                   vectorized_anneal_many)
+                                   vectorized_anneal_many,
+                                   vectorized_anneal_shared)
 
 
 @dataclasses.dataclass
@@ -32,6 +32,9 @@ class Plan:
     goal: Goal
     cluster: Cluster
     reference: Tuple[float, float]
+    # shared-capacity mode: event-exact joint validation of the batch this
+    # plan was co-scheduled with (None for isolated / single plans)
+    joint_errors: Optional[List[str]] = None
 
     @property
     def makespan(self) -> float:
@@ -90,19 +93,29 @@ class Agora:
 
     def plan_many(self, dags: Sequence[DAG],
                   refs: Optional[Sequence[Tuple[float, float]]] = None,
-                  ) -> List[Plan]:
-        """Plan P independent tenant DAGs in ONE batched device solve.
+                  shared_capacity: bool = False) -> List[Plan]:
+        """Plan P tenant DAGs in ONE batched device solve.
 
         The multi-tenant front door: where ``plan(dags)`` co-schedules its
-        inputs on one shared timeline, ``plan_many`` treats each DAG as an
-        isolated tenant problem and anneals all of them simultaneously —
-        the problems are pad-and-stacked and every (chain, problem) advances
-        in lockstep under a single JIT dispatch, so planning N tenants costs
-        one device round trip instead of N. Each returned ``Plan`` is
-        re-evaluated event-exactly on the host and validates independently.
+        inputs on one shared timeline, ``plan_many`` keeps per-tenant plans
+        and anneals all of them simultaneously — the problems are
+        pad-and-stacked and every (chain, problem) advances in lockstep
+        under a single JIT dispatch, so planning N tenants costs one device
+        round trip instead of N.
 
-        Falls back to a sequential loop for host-side solvers ("anneal",
-        "ising"); the batched path requires solver="vectorized".
+        ``shared_capacity=False`` (default) isolates tenants: each draws
+        from a private copy of the full cluster quota, so the batch solve is
+        embarrassingly parallel but the plans cannot be dispatched together
+        without oversubscribing the cluster. ``shared_capacity=True``
+        couples the batch through one cluster-wide usage tensor (the
+        paper's co-scheduling at scale): the returned plans share a
+        timeline, are re-evaluated event-exactly with one joint host SGS
+        pass, and carry ``joint_errors`` — the joint validation result
+        asserting no event time exceeds global capacity.
+
+        Falls back for host-side solvers ("anneal", "ising") and mesh mode:
+        a sequential per-DAG loop when isolated, a single joint ``plan``
+        split back into per-tenant plans when shared.
         """
         dags = list(dags)
         if not dags:
@@ -116,11 +129,50 @@ class Agora:
             # plan() shards chains + replica-exchanges per problem — keep
             # that behavior until the batched engine shards the problem
             # axis too (ROADMAP: shard_map across problems)
+            if shared_capacity:
+                return self._plan_shared_fallback(dags, problems, refs)
             return [self.plan([d], ref=r) for d, r in zip(dags, refs)]
+        if shared_capacity:
+            sols, joint_errors = vectorized_anneal_shared(
+                problems, self.cluster, self.goal, self.vec_cfg, refs)
+            return [Plan(p, s, self.goal, self.cluster, r,
+                         joint_errors=joint_errors)
+                    for p, s, r in zip(problems, sols, refs)]
         sols = vectorized_anneal_many(problems, self.cluster, self.goal,
                                       self.vec_cfg, refs)
         return [Plan(p, s, self.goal, self.cluster, r)
                 for p, s, r in zip(problems, sols, refs)]
+
+    def _plan_shared_fallback(self, dags: Sequence[DAG],
+                              problems: Sequence[FlatProblem],
+                              refs: Sequence[Tuple[float, float]]) -> List[Plan]:
+        """Shared-capacity planning without the coupled device path: solve
+        ONE joint co-scheduled plan, then split it back into per-tenant
+        plans on the shared timeline."""
+        joint = self.plan(dags)
+        plans: List[Plan] = []
+        per_tenant = []
+        off = 0
+        for prob, ref in zip(problems, refs):
+            Jp = prob.num_tasks
+            sl = slice(off, off + Jp)
+            oi = joint.solution.option_idx[sl]
+            s, f = joint.solution.start[sl], joint.solution.finish[sl]
+            cost = schedule_cost(prob, oi, self.cluster.prices_per_sec)
+            mk = float(f.max())
+            sol = Solution(oi, s, f, mk, cost,
+                           self.goal.energy(mk, cost, ref[0], ref[1]),
+                           solver=joint.solution.solver + "-shared-split")
+            per_tenant.append((oi, s, f))
+            plans.append(Plan(prob, sol, self.goal, self.cluster, ref))
+            off += Jp
+        joint_errors = validate_schedule_many(
+            list(problems), [t[0] for t in per_tenant],
+            [t[1] for t in per_tenant], [t[2] for t in per_tenant],
+            self.cluster.caps)
+        for p in plans:
+            p.joint_errors = joint_errors
+        return plans
 
     def replan(self, plan: Plan, *, now: float,
                done: Sequence[int] = (),
@@ -169,13 +221,34 @@ class Agora:
             prob.dag_names.extend(extra.dag_names)
             prob.release = np.concatenate(
                 [prob.release, np.maximum(extra.release, now)])
-        agora2 = Agora(cluster, self.goal, self.solver, self.anneal_cfg,
-                       self.vec_cfg, self.mesh)
         ref = reference_point(prob, cluster)
         if self.solver == "anneal":
             sol = anneal(prob, cluster, self.goal, self.anneal_cfg, ref)
         else:
             sol = vectorized_anneal(prob, cluster, self.goal, self.vec_cfg,
                                     ref, mesh=self.mesh)
-        del agora2
         return Plan(prob, sol, self.goal, cluster, ref)
+
+
+def combine_plans(plans: Sequence[Plan]) -> Plan:
+    """Stitch per-tenant shared-capacity plans into ONE joint Plan on their
+    common timeline (the form the flow executor dispatches against a single
+    capacity pool). Solutions are concatenated verbatim — shared-capacity
+    planning already placed them jointly, so no re-solve happens here."""
+    plans = list(plans)
+    assert plans, "need at least one plan"
+    cluster = plans[0].cluster
+    goal = plans[0].goal
+    problem = concat_problems([p.problem for p in plans])
+    oi = np.concatenate([p.solution.option_idx for p in plans])
+    start = np.concatenate([p.solution.start for p in plans])
+    finish = np.concatenate([p.solution.finish for p in plans])
+    mk = float(finish.max() - problem.release.min()) if len(finish) else 0.0
+    cost = float(sum(p.solution.cost for p in plans))
+    ref_M = max(p.reference[0] for p in plans)
+    ref_C = sum(p.reference[1] for p in plans)
+    sol = Solution(oi, start, finish, mk, cost,
+                   goal.energy(mk, cost, ref_M, ref_C),
+                   solver=plans[0].solution.solver + "-joint")
+    return Plan(problem, sol, goal, cluster, (ref_M, ref_C),
+                joint_errors=plans[0].joint_errors)

@@ -12,7 +12,6 @@
 """
 from __future__ import annotations
 
-import math
 import time
 from typing import Optional, Tuple
 

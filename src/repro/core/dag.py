@@ -8,7 +8,7 @@ the profile), yielding a (duration, demand-vector, cost) triple.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -177,10 +177,106 @@ class PackedProblems:
     def edges_of(self, p: int) -> List[Tuple[int, int]]:
         return list(self.problems[p].edges)
 
+    def shared_layout(self) -> "SharedCapacityLayout":
+        """Flatten the batch into one block-diagonal joint instance whose
+        slots all draw from a single cluster-wide usage tensor (cached)."""
+        if getattr(self, "_shared_layout", None) is None:
+            self._shared_layout = build_shared_layout(self)
+        return self._shared_layout
+
+
+@dataclasses.dataclass
+class SharedCapacityLayout:
+    """Block-diagonal flattening of a ``PackedProblems`` batch.
+
+    Shared-capacity co-scheduling couples the P tenants through one
+    cluster-wide usage tensor: every padded slot (p, j) becomes flattened
+    slot p * Jmax + j, the per-problem predecessor masks become one
+    block-diagonal (P*Jmax, P*Jmax) mask, and every slot's resource demands
+    land in the SAME (T, M) usage accumulation during decoding. The
+    isolated-tenant mode is the degenerate case of this layout in which
+    tenants demand disjoint resource subsets — then the usage tensor is
+    block-diagonal too and the joint decode factorizes back into P
+    independent ones.
+    """
+    packed: PackedProblems
+    slot_problem: np.ndarray    # (P*Jmax,) int64 — owning problem per slot
+    slot_mask: np.ndarray       # (P*Jmax,) bool — True for real tasks
+    durations: np.ndarray       # (P*Jmax, Omax)
+    demands: np.ndarray         # (P*Jmax, Omax, M)
+    costs: np.ndarray           # (P*Jmax, Omax)
+    n_opts: np.ndarray          # (P*Jmax,) int64
+    pred_mask: np.ndarray       # (P*Jmax, P*Jmax) bool, block-diagonal
+    release: np.ndarray         # (P*Jmax,)
+    default_option: np.ndarray  # (P*Jmax,) int64
+    num_resources: int
+
+    @property
+    def num_slots(self) -> int:
+        return self.slot_problem.shape[0]
+
+    def joint_problem(self) -> FlatProblem:
+        """Concatenate the real tasks of all tenants into one FlatProblem
+        (the instance the event-exact host re-evaluation schedules)."""
+        return concat_problems(self.packed.problems)
+
+
+def build_shared_layout(packed: PackedProblems) -> SharedCapacityLayout:
+    P, Jmax = packed.task_mask.shape
+    n = P * Jmax
+    slot_problem = np.repeat(np.arange(P, dtype=np.int64), Jmax)
+    pred = np.zeros((n, n), bool)
+    for p in range(P):
+        s = p * Jmax
+        pred[s:s + Jmax, s:s + Jmax] = packed.pred_mask[p]
+    return SharedCapacityLayout(
+        packed=packed,
+        slot_problem=slot_problem,
+        slot_mask=packed.task_mask.reshape(n),
+        durations=packed.durations.reshape(n, -1),
+        demands=packed.demands.reshape(n, packed.durations.shape[2],
+                                       packed.num_resources),
+        costs=packed.costs.reshape(n, -1),
+        n_opts=packed.n_opts.reshape(n),
+        pred_mask=pred,
+        release=packed.release.reshape(n),
+        default_option=packed.default_option.reshape(n),
+        num_resources=packed.num_resources,
+    )
+
+
+def concat_problems(problems: Sequence[FlatProblem]) -> FlatProblem:
+    """Stack P FlatProblems into one joint instance on a shared timeline:
+    task indices offset per problem, DAG bookkeeping concatenated."""
+    problems = list(problems)
+    assert problems, "need at least one problem"
+    M = problems[0].num_resources
+    assert all(pr.num_resources == M for pr in problems)
+    tasks: List[Task] = []
+    edges: List[Tuple[int, int]] = []
+    dag_of: List[np.ndarray] = []
+    dag_names: List[str] = []
+    release: List[np.ndarray] = []
+    for pr in problems:
+        base = len(tasks)
+        dag_base = len(dag_names)
+        tasks.extend(pr.tasks)
+        edges.extend((a + base, b + base) for a, b in pr.edges)
+        dag_of.append(np.asarray(pr.dag_of) + dag_base)
+        dag_names.extend(pr.dag_names)
+        release.append(np.asarray(pr.release, float))
+    return FlatProblem(tasks, edges, np.concatenate(dag_of), dag_names,
+                       np.concatenate(release), M)
+
 
 def pack_problems(problems: Sequence[FlatProblem],
-                  num_resources: Optional[int] = None) -> PackedProblems:
-    """Pad-and-stack P independent problems for one batched device solve."""
+                  num_resources: Optional[int] = None,
+                  shared_capacity: bool = False) -> PackedProblems:
+    """Pad-and-stack P independent problems for one batched device solve.
+
+    With ``shared_capacity=True`` the block-diagonal joint layout (every
+    slot's demands mapped into one cluster-wide usage tensor; see
+    ``SharedCapacityLayout``) is precomputed and cached on the result."""
     problems = list(problems)
     assert problems, "need at least one problem"
     if num_resources is None:
@@ -222,8 +318,11 @@ def pack_problems(problems: Sequence[FlatProblem],
         release[p, :J] = pr.release
         default[p, :J] = [t.default_option for t in pr.tasks]
 
-    return PackedProblems(problems, dur, dem, cost, n_opts, n_real, mask,
-                          pred, release, default, num_resources)
+    packed = PackedProblems(problems, dur, dem, cost, n_opts, n_real, mask,
+                            pred, release, default, num_resources)
+    if shared_capacity:
+        packed.shared_layout()
+    return packed
 
 
 def flatten(dags: Sequence[DAG], num_resources: int) -> FlatProblem:

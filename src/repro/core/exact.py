@@ -16,9 +16,8 @@ when the node budget trips.
 """
 from __future__ import annotations
 
-import math
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -14,14 +14,13 @@
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cluster.catalog import Cluster, InstanceType
+from repro.cluster.catalog import Cluster
 from repro.core.dag import TaskOption
 
 

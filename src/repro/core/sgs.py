@@ -11,7 +11,6 @@ order space; the annealers perturb priorities.
 from __future__ import annotations
 
 import heapq
-import math
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -136,5 +135,45 @@ def validate_schedule(problem: FlatProblem, option_idx: np.ndarray,
         usage = demands[active].sum(axis=0) if active.any() else np.zeros(len(caps))
         if np.any(usage > caps + 1e-6):
             errs.append(f"capacity violated at t={pt}")
+            break
+    return errs
+
+
+def validate_schedule_many(problems: Sequence[FlatProblem],
+                           option_idxs: Sequence[np.ndarray],
+                           starts: Sequence[np.ndarray],
+                           finishes: Sequence[np.ndarray],
+                           caps: np.ndarray) -> List[str]:
+    """Joint-schedule invariants for shared-capacity co-scheduling: each
+    tenant's schedule must satisfy its own precedence/duration/release
+    constraints, and the SUM of all tenants' demands must stay within the
+    global capacity vector at every event time of the joint timeline."""
+    errs: List[str] = []
+    all_start: List[np.ndarray] = []
+    all_finish: List[np.ndarray] = []
+    all_dem: List[np.ndarray] = []
+    for p, (prob, oi, s, f) in enumerate(
+            zip(problems, option_idxs, starts, finishes)):
+        # per-tenant structural checks against an uncapacitated cluster:
+        # the capacity invariant is joint, not per-tenant
+        free = np.full(len(caps), np.inf)
+        errs.extend(f"problem {p}: {e}"
+                    for e in validate_schedule(prob, oi, s, f, free))
+        _, dem_all, _, _ = prob.option_arrays()
+        all_dem.append(dem_all[np.arange(prob.num_tasks), oi])
+        all_start.append(np.asarray(s, float))
+        all_finish.append(np.asarray(f, float))
+    start = np.concatenate(all_start)
+    finish = np.concatenate(all_finish)
+    demands = np.concatenate(all_dem)
+    points = np.unique(np.concatenate([start, finish]))
+    for pt in points:
+        active = (start <= pt + 1e-12) & (pt + 1e-12 < finish)
+        usage = demands[active].sum(axis=0) if active.any() \
+            else np.zeros(len(caps))
+        if np.any(usage > caps + 1e-6):
+            over = np.flatnonzero(usage > caps + 1e-6)
+            errs.append(f"joint capacity violated at t={pt} "
+                        f"(resources {over.tolist()})")
             break
     return errs

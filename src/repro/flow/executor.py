@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import json
+import math
 import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -49,6 +50,15 @@ class FlowConfig:
     replan_on_straggler: bool = False
 
 
+def _backoff_delay(cfg: FlowConfig, attempt: int) -> float:
+    """Capped exponential retry backoff, shared by task-level retries
+    (FlowRunner) and plan-level retries (MultiTenantRunner)."""
+    if cfg.retry_backoff <= 0:
+        return 0.0
+    return min(cfg.retry_backoff_cap,
+               cfg.retry_backoff * 2.0 ** (attempt - 1))
+
+
 @dataclasses.dataclass
 class TaskRun:
     task: int
@@ -68,6 +78,11 @@ class FlowResult:
     speculations: int
     replans: int
     events: List[str]
+    # per-task accounting (lets a joint shared-cluster run be split back
+    # into per-tenant records)
+    task_retries: Dict[int, int] = dataclasses.field(default_factory=dict)
+    task_speculations: Dict[int, int] = dataclasses.field(default_factory=dict)
+    task_cost: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 class FlowRunner:
@@ -140,6 +155,8 @@ class FlowRunner:
         heap: List[Tuple[float, int, str, Any]] = []
         seq = 0
         attempts: Dict[int, int] = {j: 0 for j in range(J)}
+        task_retries: Dict[int, int] = {j: 0 for j in range(J)}
+        task_specs: Dict[int, int] = {j: 0 for j in range(J)}
         running: Dict[int, List[TaskRun]] = {}
         backing_off: set = set()           # tasks waiting out a retry delay
         backoff_idle: Dict[int, float] = {}  # per-task accumulated delay
@@ -209,6 +226,7 @@ class FlowRunner:
                 still = [r for r in running[j] if r.attempt == run.attempt]
                 if still and cfg.mode == "sim":
                     self.speculations += 1
+                    task_specs[j] += 1
                     self._log(clock, f"speculative duplicate of task {j}")
                     launch(j, speculative=True)
                     if cfg.replan_on_straggler and self.agora is not None:
@@ -219,16 +237,14 @@ class FlowRunner:
             if kind == "fail":
                 running[j] = [r for r in running[j] if r is not run]
                 self.retries += 1
+                task_retries[j] += 1
                 self._log(clock, f"task {j} attempt {run.attempt} FAILED")
                 if attempts[j] > cfg.max_retries + 1:
                     raise RuntimeError(f"task {j} exceeded retries")
                 if not running[j]:
                     del running[j]
                     # capped exponential backoff before the next attempt
-                    delay = 0.0
-                    if cfg.retry_backoff > 0:
-                        delay = min(cfg.retry_backoff_cap,
-                                    cfg.retry_backoff * 2.0 ** (run.attempt - 1))
+                    delay = _backoff_delay(cfg, run.attempt)
                     if delay > 0:
                         self._log(clock, f"task {j} backoff {delay:.1f}s")
                         backing_off.add(j)
@@ -252,13 +268,15 @@ class FlowRunner:
         oi = self.plan.solution.option_idx
         prices = self.plan.cluster.prices_per_sec
         cost = 0.0
+        task_cost: Dict[int, float] = {}
         for j in range(J):
             # backoff windows hold no resources -> not billed
             d = self.done[j] - self.started[j] - backoff_idle.get(j, 0.0)
-            cost += float((dem_all[j, oi[j]] * prices).sum() * d)
+            task_cost[j] = float((dem_all[j, oi[j]] * prices).sum() * d)
+            cost += task_cost[j]
         return FlowResult(makespan, cost, dict(self.started), dict(self.done),
                           self.retries, self.speculations, self.replans,
-                          self.events)
+                          self.events, task_retries, task_specs, task_cost)
 
 
 # ---------------------------------------------------------------------------
@@ -279,6 +297,8 @@ class TenantRecord:
     cost: float
     retries: int
     speculations: int
+    plan_retries: int = 0  # planning rounds lost to failed joint validation
+    failed: bool = False   # dropped after exhausting planning retries
 
 
 class MultiTenantRunner:
@@ -289,23 +309,53 @@ class MultiTenantRunner:
     round — the re-plan trigger re-batches the still-pending set, so a burst
     of N submissions costs one solve, not N.
 
-    Tenants are isolated: each DAG is planned and simulated against the full
-    cluster (per-tenant capacity quota), which is what lets the batch solve
-    stay embarrassingly parallel on device.
+    Two capacity models:
+
+    * isolated (default) — each DAG is planned and simulated against the
+      full cluster (per-tenant capacity quota), which is what lets the batch
+      solve stay embarrassingly parallel on device.
+    * ``shared_cluster=True`` — the batch is planned with
+      ``plan_many(shared_capacity=True)`` (one coupled solve against the
+      global capacity vector) and dispatched as ONE joint workflow drawing
+      from a single capacity pool: planned start times gate task launches so
+      the executed schedule honors the co-scheduled capacity staggering. The
+      next round replans at the later of the pool draining (completion) and
+      the next arrival.
+
+    A tenant whose plan fails validation (individually, or implicated by the
+    joint check) is NOT dropped: it is re-enqueued into the next planning
+    round after a capped exponential backoff (``cfg.retry_backoff`` doubling
+    per failed round, capped at ``cfg.retry_backoff_cap``), and only marked
+    failed after ``cfg.max_retries`` extra rounds.
     """
 
     def __init__(self, agora: Agora, dags, cfg: Optional[FlowConfig] = None,
-                 window: float = 900.0):
+                 window: float = 900.0, shared_cluster: bool = False):
         self.agora = agora
         self.dags = sorted(dags, key=lambda d: d.release_time)
         self.cfg = cfg or FlowConfig()
         self.window = float(window)      # min spacing of planning rounds
+        self.shared_cluster = shared_cluster
         self.rounds: List[int] = []      # batch size per planning round
         self.events: List[str] = []
 
+    # ------------------------------------------------------------------
+
+    def _invalid_tenants(self, plans: List) -> List[int]:
+        """Indices of batch tenants whose plan cannot be dispatched."""
+        bad = [i for i, p in enumerate(plans) if p.validate()]
+        if not bad and plans and plans[0].joint_errors:
+            # joint violation with no individual culprit: conservatively
+            # retry the whole batch rather than dispatch an invalid schedule
+            bad = list(range(len(plans)))
+        return bad
+
     def run(self) -> List[TenantRecord]:
         pending = list(self.dags)
+        submitted = {d.name: d.release_time for d in self.dags}
+        plan_attempts: Dict[str, int] = {}
         records: List[TenantRecord] = []
+        tenant_seq = 0                   # per-tenant fault-stream index
         clock = 0.0
         first = True
         while pending:
@@ -316,28 +366,129 @@ class MultiTenantRunner:
             pending = [d for d in pending if d.release_time > clock + 1e-9]
             # re-anchor each tenant's plan at the round start
             now_dags = [dataclasses.replace(d, release_time=0.0) for d in batch]
-            plans = self.agora.plan_many(now_dags)
+            plans = self.agora.plan_many(
+                now_dags, shared_capacity=self.shared_cluster)
             self.rounds.append(len(batch))
             self.events.append(
                 f"[t={clock:9.1f}] round {len(self.rounds)}: planned "
                 f"{len(batch)} DAGs in one batch "
                 f"({sum(p.problem.num_tasks for p in plans)} tasks)")
-            for dag, plan in zip(batch, plans):
-                # per-tenant noise stream (seeded by the global tenant index
-                # so rounds don't replay each other's fault sequences) AND
-                # per-tenant checkpoint file — tenants must never restore
-                # each other's task indices
-                state = (f"{self.cfg.state_path}.{dag.name}"
-                         if self.cfg.state_path else None)
-                cfg_i = dataclasses.replace(
-                    self.cfg, seed=self.cfg.seed + 7919 * len(records),
-                    state_path=state)
-                res = FlowRunner(plan, cfg_i).run()
-                records.append(TenantRecord(
-                    name=dag.name, submitted=dag.release_time,
-                    planned_at=clock, finished=clock + res.makespan,
-                    turnaround=clock + res.makespan - dag.release_time,
-                    planned_makespan=plan.makespan,
-                    realized_makespan=res.makespan, cost=res.cost,
-                    retries=res.retries, speculations=res.speculations))
+
+            # failed joint validation -> re-enqueue into the next planning
+            # round with capped exponential backoff instead of dropping
+            bad = set(self._invalid_tenants(plans))
+            good: List[Tuple[Any, Any]] = []     # (dag, plan)
+            for i, (dag, plan) in enumerate(zip(batch, plans)):
+                if i not in bad:
+                    good.append((dag, plan))
+                    continue
+                n = plan_attempts.get(dag.name, 0) + 1
+                plan_attempts[dag.name] = n
+                if n > self.cfg.max_retries:
+                    self.events.append(
+                        f"[t={clock:9.1f}] tenant {dag.name}: plan invalid "
+                        f"after {n} rounds — dropped")
+                    records.append(TenantRecord(
+                        name=dag.name, submitted=submitted[dag.name],
+                        planned_at=clock, finished=math.inf,
+                        turnaround=math.inf, planned_makespan=math.inf,
+                        realized_makespan=math.inf, cost=0.0, retries=0,
+                        speculations=0, plan_retries=n, failed=True))
+                    continue
+                delay = _backoff_delay(self.cfg, n)
+                self.events.append(
+                    f"[t={clock:9.1f}] tenant {dag.name}: plan failed joint "
+                    f"validation — re-enqueued (backoff {delay:.1f}s)")
+                pending.append(dataclasses.replace(
+                    dag, release_time=clock + max(delay, 1e-6)))
+            pending.sort(key=lambda d: d.release_time)
+
+            if not good:
+                continue
+            if bad and self.shared_cluster:
+                # the surviving tenants were co-scheduled AROUND the invalid
+                # ones' usage — re-plan the reduced batch so the dispatched
+                # joint schedule doesn't inherit stale staggering
+                redo = [dataclasses.replace(d, release_time=0.0)
+                        for d, _ in good]
+                good = list(zip([d for d, _ in good],
+                                self.agora.plan_many(redo,
+                                                     shared_capacity=True)))
+                self.events.append(
+                    f"[t={clock:9.1f}] re-planned {len(good)} valid tenants "
+                    f"after excluding {len(bad)}")
+            if self.shared_cluster:
+                completion = self._dispatch_shared(clock, good, plan_attempts,
+                                                   submitted, records)
+            else:
+                completion = self._dispatch_isolated(clock, good, tenant_seq,
+                                                     plan_attempts, submitted,
+                                                     records)
+            tenant_seq += len(good)
+            if self.shared_cluster and pending:
+                # shared pool: replan on completion/arrival, not on a fixed
+                # cadence — the pool must drain before the next joint batch
+                clock = max(completion - self.window, clock)
         return records
+
+    # ------------------------------------------------------------------
+
+    def _tenant_cfg(self, name: str, seq: int) -> FlowConfig:
+        # per-tenant noise stream (seeded by the global tenant index so
+        # rounds don't replay each other's fault sequences) AND per-tenant
+        # checkpoint file — tenants must never restore each other's indices
+        state = (f"{self.cfg.state_path}.{name}"
+                 if self.cfg.state_path else None)
+        return dataclasses.replace(self.cfg, seed=self.cfg.seed + 7919 * seq,
+                                   state_path=state)
+
+    def _dispatch_isolated(self, clock, good, tenant_seq, plan_attempts,
+                           submitted, records) -> float:
+        completion = clock
+        for k, (dag, plan) in enumerate(good):
+            res = FlowRunner(plan,
+                             self._tenant_cfg(dag.name, tenant_seq + k)).run()
+            records.append(TenantRecord(
+                name=dag.name, submitted=submitted[dag.name],
+                planned_at=clock, finished=clock + res.makespan,
+                turnaround=clock + res.makespan - submitted[dag.name],
+                planned_makespan=plan.makespan,
+                realized_makespan=res.makespan, cost=res.cost,
+                retries=res.retries, speculations=res.speculations,
+                plan_retries=plan_attempts.get(dag.name, 0)))
+            completion = max(completion, clock + res.makespan)
+        return completion
+
+    def _dispatch_shared(self, clock, good, plan_attempts, submitted,
+                         records) -> float:
+        """Execute the whole round as ONE joint workflow against the shared
+        capacity pool, then split the result back into per-tenant records."""
+        from repro.core.agora import combine_plans
+        joint = combine_plans([plan for _, plan in good])
+        # planned starts gate launches: the joint schedule's staggering IS
+        # the capacity arbitration, so the executor must honor it
+        joint.problem.release = np.asarray(joint.solution.start, float).copy()
+        rnd = len(self.rounds)
+        res = FlowRunner(joint, self._tenant_cfg(f"joint{rnd}", rnd)).run()
+        self.events.append(
+            f"[t={clock:9.1f}] joint dispatch: {joint.problem.num_tasks} "
+            f"tasks, makespan {res.makespan:.1f}s, retries={res.retries}")
+        off = 0
+        completion = clock
+        for dag, plan in good:
+            J = plan.problem.num_tasks
+            idx = range(off, off + J)
+            t_done = max(res.task_finish[j] for j in idx)
+            records.append(TenantRecord(
+                name=dag.name, submitted=submitted[dag.name],
+                planned_at=clock, finished=clock + t_done,
+                turnaround=clock + t_done - submitted[dag.name],
+                planned_makespan=plan.makespan,
+                realized_makespan=t_done,
+                cost=sum(res.task_cost[j] for j in idx),
+                retries=sum(res.task_retries[j] for j in idx),
+                speculations=sum(res.task_speculations[j] for j in idx),
+                plan_retries=plan_attempts.get(dag.name, 0)))
+            completion = max(completion, clock + t_done)
+            off += J
+        return completion

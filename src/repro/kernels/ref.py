@@ -3,7 +3,6 @@ Pallas kernels must reproduce (asserted across shape/dtype sweeps in tests).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -18,7 +18,6 @@ import argparse     # noqa: E402
 import json         # noqa: E402
 import time         # noqa: E402
 import traceback    # noqa: E402
-from typing import Optional  # noqa: E402
 
 import jax          # noqa: E402
 import jax.numpy as jnp  # noqa: E402

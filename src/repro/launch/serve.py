@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

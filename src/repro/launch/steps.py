@@ -7,13 +7,12 @@ optimizer state mirrors the parameter sharding; batches shard over
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.models.common import ModelConfig
 from repro.models.transformer import Model
 from repro.optim import adamw
 

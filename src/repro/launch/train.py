@@ -12,12 +12,10 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.ckpt import Checkpointer
 from repro.configs import ARCH_IDS, get_config

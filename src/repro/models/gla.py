@@ -98,7 +98,6 @@ def gla_chunked_scalar(q, k, v, g, *, chunk: int = 128,
     gc = _split_chunks(g, c)                                        # (B,N,c,H)
     G = jnp.cumsum(gc, axis=2)                                      # inclusive cumsum
     Gtot = G[:, :, -1]                                              # (B,N,H)
-    N = qc.shape[1]
 
     mask = jnp.tril(jnp.ones((c, c), bool))                         # s <= t
 

@@ -7,7 +7,6 @@ builders that register sharding specs on the Initializer.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ MLP and computed densely outside this module.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ scales. Embedding/head stay outside the staged region (replicated over
 """
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,9 +12,7 @@ is the single-token serving step against an explicit cache pytree.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +21,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import layers as ll
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.common import (DATA_AXES, TP_AXIS, Initializer, ModelConfig,
-                                 axis_size, data_axes, spec_for, tree_specs)
+from repro.models.common import (TP_AXIS, Initializer, ModelConfig,
+                                 axis_size, data_axes, tree_specs)
 
 
 def _remat_policy(name: str):
@@ -440,7 +438,6 @@ class Model:
     def decode_step(self, params, cache, batch, cache_index):
         """One-token decode: batch has tokens (B,1) or embeds (B,1,d) (+ patches
         pre-cached). Returns (logits (B,1,V), new_cache)."""
-        cfg = self.cfg
         x = self._embed_in(params, batch)
         B = x.shape[0]
         positions = jnp.broadcast_to(jnp.asarray(cache_index)[None, None], (B, 1))

@@ -21,7 +21,6 @@ Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, Optional, Tuple
 
@@ -60,8 +59,6 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
     out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
         ls = line.strip()
-        # match op name after '=' e.g. "%x = f32[..] all-gather(..)"
-        m = re.search(r"=\s*(?:\(?)([a-z0-9\[\],{}: ()%._-]+)", ls)
         for kind in _COLLECTIVES:
             if re.search(rf"\b{kind}(-start|-done)?\(", ls):
                 if f"{kind}-done" in ls:

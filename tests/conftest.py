@@ -4,7 +4,6 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # NOTE: no xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device. Only launch/dryrun.py sets placeholder devices.
 
-import jax
 import pytest
 
 

@@ -149,6 +149,55 @@ def test_backoff_not_bypassed_by_sibling_finish():
     assert res.cost == pytest.approx(float(prices[0]) * 40.0)
 
 
+def _infeasible_and_ok_dags():
+    """One tenant with a task demanding more than the whole cluster (its
+    plan can never validate) plus one well-behaved tenant."""
+    from repro.cluster.catalog import Cluster, InstanceType
+    from repro.core.dag import DAG, Task, TaskOption
+
+    cluster = Cluster((InstanceType("r0", 1, 1, 3.6),), (4,))
+    bad = DAG("bad", [Task("huge", [TaskOption("o", 10.0, (10.0,), 100.0)])],
+              [], release_time=0.0)
+    ok = DAG("ok", [Task("a", [TaskOption("o", 10.0, (1.0,), 10.0)]),
+                    Task("b", [TaskOption("o", 20.0, (1.0,), 20.0)])],
+             [(0, 1)], release_time=0.0)
+    return cluster, bad, ok
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_invalid_plan_reenqueued_not_dropped(shared):
+    """Regression: a tenant whose plan fails (joint) validation is re-
+    enqueued into the next planning round with retry backoff — never
+    silently dropped — and marked failed only after max_retries rounds;
+    healthy tenants in the same batch are unaffected."""
+    cluster, bad, ok = _infeasible_and_ok_dags()
+    agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                  vec_cfg=VecConfig(chains=4, iters=10, grid=32, seed=0))
+    cfg = FlowConfig(mode="sim", max_retries=2, retry_backoff=50.0,
+                     retry_backoff_cap=300.0, speculation=False)
+    runner = MultiTenantRunner(agora, [bad, ok], cfg, window=100.0,
+                               shared_cluster=shared)
+    records = runner.run()
+    by_name = {r.name: r for r in records}
+    assert set(by_name) == {"bad", "ok"}       # nothing dropped silently
+    # the healthy tenant completed in round 1, untouched by the bad one
+    assert not by_name["ok"].failed
+    assert by_name["ok"].planned_at == 0.0
+    assert by_name["ok"].realized_makespan == pytest.approx(30.0)
+    # the bad tenant was re-enqueued max_retries times, then marked failed
+    r_bad = by_name["bad"]
+    assert r_bad.failed
+    assert r_bad.plan_retries == cfg.max_retries + 1
+    assert r_bad.finished == float("inf")
+    requeues = [e for e in runner.events if "re-enqueued" in e]
+    assert len(requeues) == cfg.max_retries
+    assert any("backoff 50.0s" in e for e in requeues)
+    assert any("dropped" in e for e in runner.events)
+    # each retry landed in a LATER planning round (backoff actually delays)
+    assert len(runner.rounds) == cfg.max_retries + 1
+    assert r_bad.planned_at > 0.0
+
+
 def test_multi_tenant_rolling_horizon():
     """Pending queue -> plan_many -> dispatch; later arrivals are re-batched
     into the next round instead of getting one solve each."""

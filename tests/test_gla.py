@@ -9,7 +9,7 @@ except ImportError:              # hermetic env: deterministic shim
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.models.gla import (gla_chunked_scalar, gla_chunked_vector,
-                              gla_scan_ref, gla_step)
+                              gla_scan_ref)
 
 
 def _inputs(seed, B, S, H, dk, dv, vector_decay):

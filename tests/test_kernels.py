@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret mode on CPU) vs the pure-jnp
 oracle across shape/dtype sweeps, plus hypothesis property sweeps."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

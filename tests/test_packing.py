@@ -97,7 +97,6 @@ def test_padding_never_shifts_real_starts(seed):
     real task. Exercises the actual device decoder, not just the arrays."""
     import jax.numpy as jnp
 
-    from repro.core.objectives import Goal
     from repro.core.vectorized import (BatchedDeviceProblem, DeviceProblem,
                                        VecConfig, decode_schedule)
 

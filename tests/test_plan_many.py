@@ -2,15 +2,13 @@
 bit-identical to the single-problem path, every batched plan validates, and
 batch quality tracks per-DAG sequential quality."""
 import numpy as np
-import pytest
 
 from repro.cluster.catalog import alibaba_cluster
 from repro.cluster.workloads import synth_trace
 from repro.core.agora import Agora
 from repro.core.dag import flatten
 from repro.core.objectives import Goal
-from repro.core.vectorized import VecConfig, vectorized_anneal, \
-    vectorized_anneal_many
+from repro.core.vectorized import VecConfig, vectorized_anneal_many
 
 CFG = VecConfig(chains=32, iters=150, grid=128, seed=0)
 

@@ -1,0 +1,207 @@
+"""Shared-capacity co-scheduling invariants.
+
+Property: the joint schedule produced by ``vectorized_anneal_shared`` /
+``Agora.plan_many(shared_capacity=True)`` never exceeds the global capacity
+vector at any event time.  Differential: a batch whose tenants demand
+DISJOINT resource subsets is the degenerate block-diagonal case of the
+shared layout and must reproduce isolated-mode plans bit-for-bit (identical
+RNG streams, identical per-problem decodes).
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.cluster.catalog import Cluster, InstanceType
+from repro.core.agora import Agora, combine_plans
+from repro.core.dag import (DAG, Task, TaskOption, concat_problems, flatten,
+                            pack_problems)
+from repro.core.objectives import Goal
+from repro.core.vectorized import (VecConfig, vectorized_anneal_many,
+                                   vectorized_anneal_shared)
+
+# shapes are FIXED across property examples so the coupled solve compiles
+# once; only contents (durations, demands, edges, caps) vary per draw
+P_TENANTS, J_TASKS, N_OPTS, M_RES = 3, 6, 2, 2
+CFG = VecConfig(chains=8, iters=40, grid=64, seed=0)
+
+
+def _cluster(caps):
+    return Cluster(tuple(InstanceType(f"r{m}", 1, 1, 3.6)
+                         for m in range(len(caps))), tuple(caps))
+
+
+def _random_problems(rng, demand_hi=2.0):
+    problems = []
+    for _ in range(P_TENANTS):
+        tasks = []
+        for j in range(J_TASKS):
+            opts = []
+            for o in range(N_OPTS):
+                d = float(rng.uniform(5, 40))
+                dem = tuple(float(x)
+                            for x in rng.uniform(0.1, demand_hi, M_RES))
+                opts.append(TaskOption(f"o{o}", d, dem, d * sum(dem)))
+            tasks.append(Task(f"t{j}", opts,
+                              default_option=int(rng.integers(0, N_OPTS))))
+        edges = [(a, b) for a in range(J_TASKS) for b in range(a + 1, J_TASKS)
+                 if rng.random() < 0.25]
+        problems.append(flatten([DAG("d", tasks, edges)], M_RES))
+    return problems
+
+
+def _joint_usage_ok(problems, sols, caps):
+    """Direct event sweep: summed demand across ALL tenants <= caps."""
+    start = np.concatenate([s.start for s in sols])
+    finish = np.concatenate([s.finish for s in sols])
+    dem = []
+    for prob, sol in zip(problems, sols):
+        _, dem_all, _, _ = prob.option_arrays()
+        dem.append(dem_all[np.arange(prob.num_tasks), sol.option_idx])
+    dem = np.concatenate(dem)
+    for pt in np.unique(np.concatenate([start, finish])):
+        active = (start <= pt + 1e-12) & (pt + 1e-12 < finish)
+        usage = dem[active].sum(axis=0) if active.any() else np.zeros(len(caps))
+        if np.any(usage > caps + 1e-6):
+            return False
+    return True
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_joint_schedule_never_exceeds_global_capacity(seed):
+    """Contended random batches: every event time of the joint schedule
+    stays within the shared capacity vector, and the solver's own joint
+    validation agrees."""
+    rng = np.random.default_rng(seed)
+    problems = _random_problems(rng)
+    # caps admit any single task (feasible) but not all tenants at once
+    caps = (3.0,) * M_RES
+    cluster = _cluster(caps)
+    sols, joint_errors = vectorized_anneal_shared(problems, cluster,
+                                                  Goal.balanced(), CFG)
+    assert joint_errors == [], joint_errors
+    assert _joint_usage_ok(problems, sols, np.asarray(caps))
+
+
+def _disjoint_tenants(P):
+    """P structurally identical tenants, tenant p demanding ONLY resource p:
+    per-tenant-sized disjoint capacities — the degenerate case in which the
+    shared usage tensor factorizes back into isolated per-tenant quotas."""
+    dags = []
+    for p in range(P):
+        rng = np.random.default_rng(42)      # identical draws per tenant
+        tasks = []
+        for j in range(7):
+            opts = []
+            for o in range(3):
+                d = float(rng.uniform(5, 40))
+                dem = [0.0] * P
+                dem[p] = float(rng.uniform(0.5, 2.5))
+                opts.append(TaskOption(f"o{o}", d, tuple(dem), d * sum(dem)))
+            tasks.append(Task(f"t{j}", opts, default_option=1))
+        dags.append(DAG(f"d{p}", tasks,
+                        edges=[(0, 2), (1, 3), (2, 4), (3, 5), (4, 6)]))
+    return dags
+
+
+def test_disjoint_capacities_reproduce_isolated_bit_for_bit():
+    """shared_capacity=True over disjoint per-tenant capacities IS isolated
+    mode: same option choices, same start/finish times, same energies."""
+    P = 3
+    dags = _disjoint_tenants(P)
+    cluster = _cluster((4,) * P)
+    probs = [flatten([d], P) for d in dags]
+    cfg = VecConfig(chains=16, iters=100, grid=96, seed=0)
+    iso = vectorized_anneal_many(probs, cluster, Goal.balanced(), cfg)
+    sh, joint_errors = vectorized_anneal_shared(probs, cluster,
+                                                Goal.balanced(), cfg)
+    assert joint_errors == []
+    for a, b in zip(iso, sh):
+        np.testing.assert_array_equal(a.option_idx, b.option_idx)
+        np.testing.assert_array_equal(a.start, b.start)
+        np.testing.assert_array_equal(a.finish, b.finish)
+        assert a.makespan == b.makespan
+        assert a.cost == b.cost
+        assert a.energy == b.energy
+
+
+def test_plan_many_shared_front_door_and_combine():
+    """Agora.plan_many(shared_capacity=True): per-tenant plans validate,
+    joint validation is clean, the batch shares one timeline, and
+    combine_plans stitches it into a dispatchable joint Plan."""
+    rng = np.random.default_rng(3)
+    problems = _random_problems(rng)
+    dags = [DAG(f"t{i}", pr.tasks, list(pr.edges))
+            for i, pr in enumerate(problems)]
+    cluster = _cluster((3.0,) * M_RES)
+    agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                  vec_cfg=CFG)
+    plans = agora.plan_many(dags, shared_capacity=True)
+    assert len(plans) == len(dags)
+    for plan in plans:
+        assert plan.validate() == []
+        assert plan.joint_errors == []
+    joint = combine_plans(plans)
+    assert joint.problem.num_tasks == sum(p.problem.num_tasks for p in plans)
+    assert joint.validate() == []           # joint timeline fits global caps
+    # the shared timeline actually interleaves tenants (no naive serialization)
+    starts = [float(p.solution.start.min()) for p in plans]
+    finishes = [float(p.solution.finish.max()) for p in plans]
+    assert min(starts) == 0.0
+    overlap = any(s < f - 1e-9 for s, f in zip(sorted(starts)[1:],
+                                               sorted(finishes)[:-1]))
+    assert overlap, (starts, finishes)
+
+
+def test_plan_many_shared_host_solver_fallback():
+    """Host-side solvers serve shared_capacity=True via one joint plan split
+    back into per-tenant plans on the shared timeline."""
+    from repro.core.annealer import AnnealConfig
+
+    rng = np.random.default_rng(5)
+    problems = _random_problems(rng)
+    dags = [DAG(f"t{i}", pr.tasks, list(pr.edges))
+            for i, pr in enumerate(problems)]
+    cluster = _cluster((3.0,) * M_RES)
+    agora = Agora(cluster, solver="anneal",
+                  anneal_cfg=AnnealConfig(min_iters=60, max_iters=100,
+                                          patience=30))
+    plans = agora.plan_many(dags, shared_capacity=True)
+    assert len(plans) == len(dags)
+    for plan, dag in zip(plans, dags):
+        assert plan.problem.num_tasks == dag.num_tasks
+        assert plan.validate() == []
+        assert plan.joint_errors == []
+
+
+def test_shared_layout_block_diagonal():
+    """pack_problems(shared_capacity=True): slots map into one flattened
+    instance, predecessor mask is block-diagonal, joint_problem round-trips
+    the concatenation."""
+    rng = np.random.default_rng(9)
+    problems = _random_problems(rng)
+    packed = pack_problems(problems, M_RES, shared_capacity=True)
+    layout = packed.shared_layout()
+    P, J = packed.task_mask.shape
+    assert layout.num_slots == P * J
+    np.testing.assert_array_equal(layout.slot_problem,
+                                  np.repeat(np.arange(P), J))
+    np.testing.assert_array_equal(layout.slot_mask,
+                                  packed.task_mask.reshape(-1))
+    # block-diagonal: no predecessor edge crosses a tenant boundary
+    for p in range(P):
+        for q in range(P):
+            blk = layout.pred_mask[p * J:(p + 1) * J, q * J:(q + 1) * J]
+            if p == q:
+                np.testing.assert_array_equal(blk, packed.pred_mask[p])
+            else:
+                assert not blk.any()
+    joint = layout.joint_problem()
+    ref = concat_problems(problems)
+    assert joint.num_tasks == ref.num_tasks == sum(
+        pr.num_tasks for pr in problems)
+    assert joint.edges == ref.edges
+    np.testing.assert_array_equal(joint.dag_of, ref.dag_of)

@@ -5,16 +5,15 @@ import itertools
 import math
 
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:              # hermetic env: deterministic shim
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.cluster.catalog import Cluster, InstanceType, paper_cluster
+from repro.cluster.catalog import paper_cluster
 from repro.core.annealer import AnnealConfig, anneal, reference_point
 from repro.core.baselines import airflow_plan, milp_ernest_plan
-from repro.core.dag import DAG, FlatProblem, Task, TaskOption, flatten
+from repro.core.dag import DAG, Task, TaskOption, flatten
 from repro.core.exact import solve_exact
 from repro.core.ising import IsingConfig, ising_anneal
 from repro.core.objectives import Goal
@@ -35,8 +34,6 @@ def _random_problem(rng, J=5, M=2, opts=1, edge_p=0.4):
     edges = [(a, b) for a in range(J) for b in range(a + 1, J)
              if rng.random() < edge_p]
     dag = DAG("r", tasks, edges)
-    cluster = Cluster(tuple(InstanceType(f"r{m}", 1, 1, 3.6) for m in range(M)),
-                      tuple(int(c) for c in np.ceil(caps)))
     prob = flatten([dag], M)
     return prob, np.asarray(np.ceil(caps), float)
 

@@ -1,6 +1,5 @@
 """Data pipeline, checkpointing, optimizer, and flow-executor tests —
 including the fault-tolerance paths (retry, speculation, restart, replan)."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
 from repro.cluster.catalog import paper_cluster
