@@ -219,21 +219,50 @@ def run_shared(*, cfg: VecConfig, tenants: int, metrics: dict) -> int:
     cost_iso = sum(float(p.solution.cost) for p in isolated)
     e_iso = goal.energy(mk_iso, cost_iso, *joint_ref)
 
+    # flag-gated joint-welfare accept mode (one Metropolis verdict per chain
+    # on the summed per-tenant delta) vs the default selfish accept —
+    # advisory comparison; zero joint violations still gates
+    import dataclasses
+
+    agora_w = Agora(cluster, goal=goal, solver="vectorized",
+                    vec_cfg=dataclasses.replace(cfg, joint_accept=True))
+    agora_w.plan_many(dags, shared_capacity=True)     # compile
+    t0 = time.monotonic()
+    welfare = agora_w.plan_many(dags, shared_capacity=True)
+    t_welfare = time.monotonic() - t0
+    viol_w = list(welfare[0].joint_errors or [])
+    viol_w += validate_schedule_many(
+        [p.problem for p in welfare],
+        [p.solution.option_idx for p in welfare],
+        [p.solution.start for p in welfare],
+        [p.solution.finish for p in welfare], cluster.caps)
+    mk_w = max(float(p.solution.finish.max()) for p in welfare)
+    cost_w = sum(float(p.solution.cost) for p in welfare)
+    e_w = goal.energy(mk_w, cost_w, *joint_ref)
+
     emit("shared_plan_many", t_shared * 1e6,
          f"P={tenants}; joint M={mk_shared:.0f}s C=${cost_shared:.2f} "
          f"e={e_shared:.3f}; violations={len(viol)}")
     emit("isolated_realized", t_iso * 1e6,
          f"P={tenants}; joint M={mk_iso:.0f}s C=${cost_iso:.2f} "
          f"e={e_iso:.3f}")
+    emit("shared_joint_welfare", t_welfare * 1e6,
+         f"P={tenants}; joint M={mk_w:.0f}s C=${cost_w:.2f} "
+         f"e={e_w:.3f} vs selfish e={e_shared:.3f} "
+         f"(advisory); violations={len(viol_w)}")
     metrics.update({
         "tenants": tenants,
         "joint_makespan_shared": mk_shared, "joint_makespan_isolated": mk_iso,
         "joint_cost_shared": cost_shared, "joint_cost_isolated": cost_iso,
         "joint_energy_shared": e_shared, "joint_energy_isolated": e_iso,
+        "joint_energy_welfare": e_w, "joint_makespan_welfare": mk_w,
+        "joint_cost_welfare": cost_w,
+        "welfare_violations": len(viol_w),
         "energy_delta": e_iso - e_shared,
         "violations": len(viol),
         "solve_seconds_shared": t_shared,
     })
+    viol += viol_w
     ok_viol = not viol
     ok_energy = e_shared <= e_iso + 1e-9
     print(f"# acceptance shared: violations={len(viol)} "

@@ -1,11 +1,13 @@
-"""Diff two BENCH_multi_tenant.json runs and fail loudly on regression.
+"""Diff two benchmark JSON runs and fail loudly on regression.
 
-CI archives every run's benchmark JSON as an artifact; this script compares
-the current run against the previous one and exits non-zero when planner
-throughput regressed by more than ``--max-regression`` (default 1.3x) on
-any batch size, so perf regressions in the batched/shared planning paths
-cannot land silently.  Quality (energy) and the shared-mode energy delta
-are reported as advisory context — they gate inside the benchmark itself.
+Works on any benchmark artifact that follows the shared schema
+(``BENCH_multi_tenant.json``, ``BENCH_streaming.json``): CI archives every
+run's JSON, and this script compares the current run against the previous
+one, exiting non-zero when planner throughput regressed by more than
+``--max-regression`` (default 1.3x) on any common throughput key.  Quality
+(energy), the shared-mode energy delta, and the streaming deadline hit
+rates are reported as advisory context — they gate inside the benchmarks
+themselves.
 
   python benchmarks/compare_bench.py prev.json curr.json [--max-regression 1.3]
 """
@@ -28,8 +30,13 @@ def compare(prev: dict, curr: dict, max_regression: float) -> int:
     if prev.get("smoke") != curr.get("smoke"):
         print(f"note: comparing smoke={prev.get('smoke')} baseline against "
               f"smoke={curr.get('smoke')} run; thresholds still apply")
-    common = sorted(set(prev_tp) & set(curr_tp),
-                    key=lambda k: int(k.lstrip("P") or 0))
+    def order(k: str):
+        # batch-size keys ("P16") sort numerically, named scenario keys
+        # ("stream") lexically after them
+        s = k.lstrip("P")
+        return (0, int(s), k) if s.isdigit() else (1, 0, k)
+
+    common = sorted(set(prev_tp) & set(curr_tp), key=order)
     if not common:
         print("no common throughput keys between runs; nothing to gate")
     for key in common:
@@ -50,6 +57,12 @@ def compare(prev: dict, curr: dict, max_regression: float) -> int:
         print(f"shared energy delta (isolated - shared, higher is better): "
               f"{p_sh.get('energy_delta'):.3f} -> "
               f"{c_sh.get('energy_delta'):.3f} (advisory)")
+    p_st, c_st = prev.get("streaming") or {}, curr.get("streaming") or {}
+    if p_st and c_st:
+        print(f"streaming guaranteed hit rate (sla vs fifo): "
+              f"{p_st.get('hit_sla'):.2f}/{p_st.get('hit_fifo'):.2f} -> "
+              f"{c_st.get('hit_sla'):.2f}/{c_st.get('hit_fifo'):.2f} "
+              f"(advisory; the sla > fifo gate runs inside the benchmark)")
     return status
 
 

@@ -77,23 +77,27 @@ class Agora:
         self.mesh = mesh
 
     def plan(self, dags: Sequence[DAG],
-             ref: Optional[Tuple[float, float]] = None) -> Plan:
+             ref: Optional[Tuple[float, float]] = None,
+             goal: Optional[Goal] = None) -> Plan:
+        goal = goal or self.goal
         problem = flatten(list(dags), self.cluster.num_resources)
         if ref is None:
             ref = reference_point(problem, self.cluster)
         if self.solver == "anneal":
-            sol = anneal(problem, self.cluster, self.goal, self.anneal_cfg, ref)
+            sol = anneal(problem, self.cluster, goal, self.anneal_cfg, ref)
         elif self.solver == "vectorized":
-            sol = vectorized_anneal(problem, self.cluster, self.goal,
+            sol = vectorized_anneal(problem, self.cluster, goal,
                                     self.vec_cfg, ref, mesh=self.mesh)
         else:
             from repro.core.ising import ising_anneal
-            sol = ising_anneal(problem, self.cluster, self.goal, ref=ref)
-        return Plan(problem, sol, self.goal, self.cluster, ref)
+            sol = ising_anneal(problem, self.cluster, goal, ref=ref)
+        return Plan(problem, sol, goal, self.cluster, ref)
 
     def plan_many(self, dags: Sequence[DAG],
                   refs: Optional[Sequence[Tuple[float, float]]] = None,
-                  shared_capacity: bool = False) -> List[Plan]:
+                  shared_capacity: bool = False,
+                  goals: Optional[Sequence[Goal]] = None,
+                  bucket_p=None) -> List[Plan]:
         """Plan P tenant DAGs in ONE batched device solve.
 
         The multi-tenant front door: where ``plan(dags)`` co-schedules its
@@ -116,6 +120,12 @@ class Agora:
         Falls back for host-side solvers ("anneal", "ising") and mesh mode:
         a sequential per-DAG loop when isolated, a single joint ``plan``
         split back into per-tenant plans when shared.
+
+        ``goals`` attaches a per-tenant objective (SLA classes: per-tenant
+        weights plus a deadline hinge term) to each DAG; ``bucket_p`` pads
+        the batched device solve's problem axis to a power-of-two bucket so
+        a streaming arrival inside the bucket re-plans with zero re-tracing
+        (padded slots are masked and bit-for-bit inert).
         """
         dags = list(dags)
         if not dags:
@@ -124,36 +134,44 @@ class Agora:
         if refs is None:
             refs = [reference_point(p, self.cluster) for p in problems]
         refs = list(refs)
+        goals = list(goals) if goals is not None else [self.goal] * len(dags)
+        assert len(goals) == len(dags)
         if self.solver != "vectorized" or self.mesh is not None:
             # host-side solvers have no batched path; with a device mesh,
             # plan() shards chains + replica-exchanges per problem — keep
             # that behavior until the batched engine shards the problem
             # axis too (ROADMAP: shard_map across problems)
             if shared_capacity:
-                return self._plan_shared_fallback(dags, problems, refs)
-            return [self.plan([d], ref=r) for d, r in zip(dags, refs)]
+                return self._plan_shared_fallback(dags, problems, refs, goals)
+            return [self.plan([d], ref=r, goal=g)
+                    for d, r, g in zip(dags, refs, goals)]
         if shared_capacity:
             sols, joint_errors = vectorized_anneal_shared(
-                problems, self.cluster, self.goal, self.vec_cfg, refs)
-            return [Plan(p, s, self.goal, self.cluster, r,
+                problems, self.cluster, self.goal, self.vec_cfg, refs,
+                goals=goals, bucket_p=bucket_p)
+            return [Plan(p, s, g, self.cluster, r,
                          joint_errors=joint_errors)
-                    for p, s, r in zip(problems, sols, refs)]
+                    for p, s, r, g in zip(problems, sols, refs, goals)]
         sols = vectorized_anneal_many(problems, self.cluster, self.goal,
-                                      self.vec_cfg, refs)
-        return [Plan(p, s, self.goal, self.cluster, r)
-                for p, s, r in zip(problems, sols, refs)]
+                                      self.vec_cfg, refs, goals=goals,
+                                      bucket_p=bucket_p)
+        return [Plan(p, s, g, self.cluster, r)
+                for p, s, r, g in zip(problems, sols, refs, goals)]
 
     def _plan_shared_fallback(self, dags: Sequence[DAG],
                               problems: Sequence[FlatProblem],
-                              refs: Sequence[Tuple[float, float]]) -> List[Plan]:
+                              refs: Sequence[Tuple[float, float]],
+                              goals: Optional[Sequence[Goal]] = None,
+                              ) -> List[Plan]:
         """Shared-capacity planning without the coupled device path: solve
         ONE joint co-scheduled plan, then split it back into per-tenant
         plans on the shared timeline."""
+        goals = list(goals) if goals is not None else [self.goal] * len(dags)
         joint = self.plan(dags)
         plans: List[Plan] = []
         per_tenant = []
         off = 0
-        for prob, ref in zip(problems, refs):
+        for prob, ref, g in zip(problems, refs, goals):
             Jp = prob.num_tasks
             sl = slice(off, off + Jp)
             oi = joint.solution.option_idx[sl]
@@ -161,10 +179,10 @@ class Agora:
             cost = schedule_cost(prob, oi, self.cluster.prices_per_sec)
             mk = float(f.max())
             sol = Solution(oi, s, f, mk, cost,
-                           self.goal.energy(mk, cost, ref[0], ref[1]),
+                           g.energy(mk, cost, ref[0], ref[1]),
                            solver=joint.solution.solver + "-shared-split")
             per_tenant.append((oi, s, f))
-            plans.append(Plan(prob, sol, self.goal, self.cluster, ref))
+            plans.append(Plan(prob, sol, g, self.cluster, ref))
             off += Jp
         joint_errors = validate_schedule_many(
             list(problems), [t[0] for t in per_tenant],

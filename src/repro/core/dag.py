@@ -161,7 +161,13 @@ class PackedProblems:
 
     @property
     def num_problems(self) -> int:
+        """Count of REAL problems (bucket-padded slots excluded)."""
         return len(self.problems)
+
+    @property
+    def padded_problems(self) -> int:
+        """Leading array dimension: real problems + bucket padding slots."""
+        return self.task_mask.shape[0]
 
     @property
     def max_tasks(self) -> int:
@@ -269,21 +275,47 @@ def concat_problems(problems: Sequence[FlatProblem]) -> FlatProblem:
                        np.concatenate(release), M)
 
 
+def bucket_size(n: int, bucket_p) -> int:
+    """Streaming-admission bucket for the problem axis.
+
+    ``bucket_p`` falsy -> exact fit ``n``.  ``True`` -> next power of two
+    >= n.  An int -> next power of two >= max(n, bucket_p), i.e. a minimum
+    bucket so early small batches pre-pay the common steady-state shape.
+    Bucketing pins the padded problem-axis extent across arrivals, so a new
+    tenant landing inside the current bucket re-plans under the SAME JIT
+    cache entry instead of forcing a fresh trace."""
+    if not bucket_p:
+        return n
+    floor = 1 if bucket_p is True else int(bucket_p)
+    target = max(n, floor, 1)
+    size = 1
+    while size < target:
+        size <<= 1
+    return size
+
+
 def pack_problems(problems: Sequence[FlatProblem],
                   num_resources: Optional[int] = None,
-                  shared_capacity: bool = False) -> PackedProblems:
+                  shared_capacity: bool = False,
+                  bucket_p=None) -> PackedProblems:
     """Pad-and-stack P independent problems for one batched device solve.
 
     With ``shared_capacity=True`` the block-diagonal joint layout (every
     slot's demands mapped into one cluster-wide usage tensor; see
-    ``SharedCapacityLayout``) is precomputed and cached on the result."""
+    ``SharedCapacityLayout``) is precomputed and cached on the result.
+
+    With ``bucket_p`` set (``True`` or an int minimum bucket) the problem
+    axis is padded to a power-of-two bucket (see ``bucket_size``).  Padded
+    problem slots are FULLY masked — zero tasks, zero durations/demands/
+    costs, one dummy option, no edges — so a bucketed solve is bit-for-bit
+    identical to the unbucketed one for every real problem."""
     problems = list(problems)
     assert problems, "need at least one problem"
     if num_resources is None:
         num_resources = problems[0].num_resources
-    assert all(pr.num_resources == num_resources for pr in problems), \
-        "all problems must share one cluster resource vector"
-    P = len(problems)
+    assert all(pr.num_resources == num_resources for pr in problems), (
+        "all problems must share one cluster resource vector")
+    P = bucket_size(len(problems), bucket_p)
     Jmax = max(pr.num_tasks for pr in problems)
     Omax = max(max(len(t.options) for t in pr.tasks) for pr in problems)
     M = num_resources

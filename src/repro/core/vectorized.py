@@ -26,6 +26,7 @@ grid quantization never corrupts reported numbers.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from functools import partial
 from typing import List, Optional, Sequence, Tuple
@@ -54,6 +55,11 @@ class VecConfig:
     seed: int = 0
     horizon_slack: float = 1.6     # grid horizon = slack * reference makespan
     prio_sigma: float = 0.35
+    # shared-capacity accept dynamics: False (default) keeps the selfish
+    # per-tenant Metropolis accept (and with it the bit-for-bit disjoint-
+    # capacity invariant); True accepts on the SUMMED per-tenant energy
+    # delta — joint welfare — one verdict per chain applied to all tenants.
+    joint_accept: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -159,10 +165,20 @@ def decode_schedule(dp: DeviceProblem, option_idx, priority):
     return start, makespan, cost, infeas
 
 
-def chain_energy(dp: DeviceProblem, goal_w, ref_M, ref_C, option_idx, priority):
+def _deadline_term(mk, dl, dl_w):
+    """Hinge SLA penalty (Goal.deadline_penalty, device side).  ``dl_w=0``
+    (no deadline class) contributes an exact 0.0, preserving non-SLA
+    energies bit-for-bit."""
+    pen = dl_w * jnp.maximum(mk - dl, 0.0) / jnp.maximum(dl, 1e-6)
+    return jnp.where(dl_w > 0, pen, 0.0)
+
+
+def chain_energy(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
+                 option_idx, priority):
     _, mk, cost, infeas = decode_schedule(dp, option_idx, priority)
     e = (goal_w * (mk - ref_M) / ref_M
          + (1.0 - goal_w) * (cost - ref_C) / ref_C)
+    e = e + _deadline_term(mk, dl, dl_w)
     return e + 100.0 * infeas.astype(jnp.float32), mk, cost
 
 
@@ -171,18 +187,21 @@ def chain_energy(dp: DeviceProblem, goal_w, ref_M, ref_C, option_idx, priority):
 # ---------------------------------------------------------------------------
 
 
-def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, cfg: VecConfig,
-             opt0, prio0, key, axis_name: Optional[str] = None,
-             j_max=None):
+def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
+             cfg: VecConfig, opt0, prio0, key,
+             axis_name: Optional[str] = None, j_max=None):
     """Run cfg.iters SA steps over a batch of chains (leading axis B).
 
     ``j_max`` (traced scalar, default J) bounds mutation targets; batched
     multi-problem solves pass the per-problem real-task count so moves never
-    land on masked padding slots."""
+    land on masked padding slots (clamped to >= 1 so fully masked bucket-
+    padding problems keep a well-defined — and inert — mutation target)."""
     B, J = opt0.shape
     if j_max is None:
         j_max = J
-    energy_fn = jax.vmap(partial(chain_energy, dp, goal_w, ref_M, ref_C))
+    j_max = jnp.maximum(j_max, 1)
+    energy_fn = jax.vmap(partial(chain_energy, dp, goal_w, ref_M, ref_C,
+                                 dl, dl_w))
 
     e0, mk0, c0 = energy_fn(opt0, prio0)
     state0 = dict(opt=opt0, prio=prio0, e=e0,
@@ -243,12 +262,6 @@ def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, cfg: VecConfig,
     return state
 
 
-@partial(jax.jit, static_argnames=("cfg", "dp_static"))
-def _run_sa_jit(dp_arrays, dp_static, goal_w, ref_M, ref_C, cfg, opt0, prio0, key):
-    dp = DeviceProblem(*dp_arrays, *dp_static)
-    return _sa_scan(dp, goal_w, ref_M, ref_C, cfg, opt0, prio0, key)
-
-
 # ---------------------------------------------------------------------------
 # Batched multi-problem SA: P tenant problems x B chains under one JIT
 # ---------------------------------------------------------------------------
@@ -301,19 +314,23 @@ class BatchedDeviceProblem:
 
 
 @partial(jax.jit, static_argnames=("cfg", "T"))
-def _run_sa_many_jit(per_problem, caps, goal_w, ref_M, ref_C, cfg, T,
-                     opt0, prio0, keys):
+def _run_sa_many_jit(per_problem, caps, goal_w, ref_M, ref_C, dl, dl_w,
+                     cfg, T, opt0, prio0, keys):
     """One device dispatch for all P problems: vmap of the chain-parallel SA
-    over the problem axis. ``per_problem`` leaves have leading axis P."""
+    over the problem axis. ``per_problem`` leaves have leading axis P;
+    ``goal_w``/``dl``/``dl_w`` are per-problem (P,) objective weights, so
+    every tenant anneals against its own SLA-classed goal."""
 
-    def one(slices, rM, rC, o0, p0, key):
+    def one(slices, gw, rM, rC, dlp, dlwp, o0, p0, key):
         (dur_bins, demands, costs, n_opts, pred_mask, release_bins, dt,
          n_real) = slices
         dp = DeviceProblem(dur_bins, demands, costs, n_opts, pred_mask,
                            release_bins, caps, dt, T)
-        return _sa_scan(dp, goal_w, rM, rC, cfg, o0, p0, key, j_max=n_real)
+        return _sa_scan(dp, gw, rM, rC, dlp, dlwp, cfg, o0, p0, key,
+                        j_max=n_real)
 
-    return jax.vmap(one)(per_problem, ref_M, ref_C, opt0, prio0, keys)
+    return jax.vmap(one)(per_problem, goal_w, ref_M, ref_C, dl, dl_w,
+                         opt0, prio0, keys)
 
 
 # priority assigned to masked padding slots: finite (so they stay below any
@@ -328,34 +345,77 @@ def _init_chains(packed: PackedProblems, cfg: VecConfig):
     Shared by the isolated and shared-capacity modes: identical key usage
     means the two modes consume the SAME random streams, which is what lets
     a shared-capacity batch over disjoint per-tenant capacities reproduce
-    isolated-mode plans bit-for-bit."""
+    isolated-mode plans bit-for-bit.
+
+    Every draw is keyed per problem index (``fold_in(k, p)``), never by a
+    (P, ...)-shaped bulk draw, so problem p's stream is independent of how
+    many problems share the batch — the property that makes bucket-padded
+    admission (``pack_problems(bucket_p=...)``) reproduce unbucketed plans
+    bit-for-bit."""
     P_n, J = packed.task_mask.shape
     B = cfg.chains
+    pids = jnp.arange(P_n)
     key = jax.random.PRNGKey(cfg.seed)
     k1, k2, k3 = jax.random.split(key, 3)
-    pkeys = jax.vmap(lambda p: jax.random.fold_in(k1, p))(jnp.arange(P_n))
+    pkeys = jax.vmap(lambda p: jax.random.fold_in(k1, p))(pids)
     n_opts = jnp.asarray(packed.n_opts, jnp.int32)
     defaults = jnp.asarray(packed.default_option, jnp.int32)    # (P, J)
     opt0 = jnp.broadcast_to(defaults[:, None, :], (P_n, B, J)).copy()
     # half the chains start from random configurations for diversity
-    rand_opt = jax.random.randint(k2, (P_n, B, J), 0, 1_000_000) \
-        % n_opts[:, None, :]
+    rand_opt = jax.vmap(
+        lambda p: jax.random.randint(jax.random.fold_in(k2, p),
+                                     (B, J), 0, 1_000_000))(pids)
+    rand_opt = rand_opt % n_opts[:, None, :]
     opt0 = jnp.where((jnp.arange(B) % 2 == 0)[None, :, None], opt0, rand_opt)
-    prio0 = jax.random.normal(k3, (P_n, B, J)) * cfg.prio_sigma
+    prio0 = jax.vmap(
+        lambda p: jax.random.normal(jax.random.fold_in(k3, p),
+                                    (B, J)))(pids) * cfg.prio_sigma
     prio0 = jnp.where(jnp.asarray(packed.task_mask)[:, None, :],
                       prio0, _MASKED_PRIO)
     return opt0, prio0, pkeys
 
 
+def _goal_arrays(goals: Sequence[Goal], padded: int):
+    """Per-tenant objective weights as device arrays, padded to the bucket.
+
+    Deadlines are encoded as (deadline, weight) pairs with weight 0 when
+    the goal carries no (finite) deadline; the device-side hinge term then
+    contributes an exact 0.0 (see ``_deadline_term``)."""
+    w, dl, dlw = [], [], []
+    for g in goals:
+        w.append(g.w)
+        sla = math.isfinite(g.deadline) and g.deadline_weight > 0
+        dl.append(g.deadline if sla else 0.0)
+        dlw.append(g.deadline_weight if sla else 0.0)
+    pad = padded - len(goals)
+    w += [0.5] * pad
+    dl += [0.0] * pad
+    dlw += [0.0] * pad
+    return (jnp.asarray(w, jnp.float32), jnp.asarray(dl, jnp.float32),
+            jnp.asarray(dlw, jnp.float32))
+
+
+def _pad_refs(ref_M: np.ndarray, ref_C: np.ndarray, padded: int):
+    """Bucket-padding problems get dummy (1, 1) reference points: their
+    energy is the constant -1 for every chain, so they shift nothing."""
+    pad = padded - len(ref_M)
+    return (np.concatenate([ref_M, np.ones(pad)]),
+            np.concatenate([ref_C, np.ones(pad)]))
+
+
 def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
                            goal: Goal, cfg: Optional[VecConfig] = None,
                            refs: Optional[Sequence[Tuple[float, float]]] = None,
-                           ) -> List[Solution]:
+                           goals: Optional[Sequence[Goal]] = None,
+                           bucket_p=None) -> List[Solution]:
     """Anneal P independent problems in one batched device solve.
 
     Returns one ``Solution`` per problem, each re-evaluated event-exactly on
     the host. ``refs`` are per-problem (makespan, cost) reference points;
-    computed with the default scheduler when omitted.
+    computed with the default scheduler when omitted.  ``goals`` optionally
+    gives each tenant its own objective (SLA classes: per-tenant w plus a
+    deadline hinge term); ``bucket_p`` pads the problem axis to a power-of-
+    two bucket so streaming arrivals re-plan without re-tracing.
     """
     cfg = cfg or VecConfig()
     problems = list(problems)
@@ -365,20 +425,25 @@ def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
         refs = [reference_point(p, cluster) for p in problems]
     refs = list(refs)
     assert len(refs) == len(problems)
+    goals = list(goals) if goals is not None else [goal] * len(problems)
+    assert len(goals) == len(problems)
     ref_M = np.asarray([r[0] for r in refs])
     ref_C = np.asarray([r[1] for r in refs])
 
-    packed = pack_problems(problems, cluster.num_resources)
-    bdp = BatchedDeviceProblem.build(packed, cluster, ref_M, cfg)
+    packed = pack_problems(problems, cluster.num_resources, bucket_p=bucket_p)
+    P_pad = packed.padded_problems
+    ref_Mp, ref_Cp = _pad_refs(ref_M, ref_C, P_pad)
+    goal_w, dl, dl_w = _goal_arrays(goals, P_pad)
+    bdp = BatchedDeviceProblem.build(packed, cluster, ref_Mp, cfg)
 
     opt0, prio0, pkeys = _init_chains(packed, cfg)
 
     per_problem = (bdp.dur_bins, bdp.demands, bdp.costs, bdp.n_opts,
                    bdp.pred_mask, bdp.release_bins, bdp.dt, bdp.n_real)
-    state = _run_sa_many_jit(per_problem, bdp.caps, goal.w,
-                             jnp.asarray(ref_M, jnp.float32),
-                             jnp.asarray(ref_C, jnp.float32),
-                             cfg, bdp.T, opt0, prio0, pkeys)
+    state = _run_sa_many_jit(per_problem, bdp.caps, goal_w,
+                             jnp.asarray(ref_Mp, jnp.float32),
+                             jnp.asarray(ref_Cp, jnp.float32),
+                             dl, dl_w, cfg, bdp.T, opt0, prio0, pkeys)
 
     best_idx = np.asarray(jnp.argmin(state["best_e"], axis=1))     # (P,)
     best_opt = np.asarray(state["best_opt"])                        # (P, B, J)
@@ -395,7 +460,7 @@ def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
         cost = schedule_cost(prob, oi, cluster.prices_per_sec)
         mk = float(finish.max())
         sol = Solution(oi, start, finish, mk, cost,
-                       goal.energy(mk, cost, ref_M[p], ref_C[p]),
+                       goals[p].energy(mk, cost, ref_M[p], ref_C[p]),
                        solver="agora-vectorized-many")
         sol.solve_seconds = elapsed   # batch wall time: one dispatch for all P
         sols.append(sol)
@@ -450,12 +515,15 @@ class SharedDeviceProblem:
 
 
 def shared_chain_energy(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
-                        option_idx, priority):
+                        dl, dl_w, option_idx, priority):
     """option_idx/priority (P, J) -> per-tenant (energy, makespan, cost),
     each (P,), from ONE joint decode against the shared usage tensor. Where
     ``chain_energy`` prices P independent capacity frontiers, this couples
     them: a tenant's feasible windows shrink by exactly the capacity its
-    competitors' current configurations consume."""
+    competitors' current configurations consume.  ``goal_w``/``dl``/``dl_w``
+    are per-tenant (P,) weights, so a guaranteed-class tenant's deadline
+    hinge pushes its energy — and through the accept dynamics, the whole
+    batch — toward configurations that protect its SLA."""
     P_n, J = option_idx.shape
     flat_o = option_idx.reshape(-1)
     flat_p = priority.reshape(-1)
@@ -466,22 +534,29 @@ def shared_chain_energy(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
     infeas = jnp.sum(~ok.reshape(P_n, J), axis=1)
     e = (goal_w * (mk - ref_M) / ref_M
          + (1.0 - goal_w) * (cost - ref_C) / ref_C)
+    e = e + _deadline_term(mk, dl, dl_w)
     return e + 100.0 * infeas.astype(jnp.float32), mk, cost
 
 
 def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
-                    cfg: VecConfig, opt0, prio0, pkeys):
+                    dl, dl_w, cfg: VecConfig, opt0, prio0, pkeys):
     """Coupled-batch SA: the P tenants keep their own chains, moves, and
     accept decisions (identical key streams to the isolated ``_sa_scan``
     under vmap — the disjoint-capacity degenerate case reproduces isolated
     trajectories bit-for-bit), but chain b's energies come from decoding ALL
     P problems' chain-b states jointly, so annealing moves effectively trade
     capacity between tenants: one tenant shrinking its configuration frees
-    windows that lower a competitor's energy at the next evaluation."""
+    windows that lower a competitor's energy at the next evaluation.
+
+    With ``cfg.joint_accept`` the per-tenant (selfish) Metropolis verdicts
+    are replaced by ONE verdict per chain on the summed energy delta (joint
+    welfare): a move that hurts one tenant but helps the batch more can now
+    be kept.  This breaks the bit-for-bit disjoint-capacity degeneracy, so
+    it stays behind the flag."""
     P_n, B, J = opt0.shape
     n_opts_pj = sdp.dp.n_opts.reshape(P_n, J)
     energy_all = jax.vmap(
-        partial(shared_chain_energy, sdp, goal_w, ref_M, ref_C),
+        partial(shared_chain_energy, sdp, goal_w, ref_M, ref_C, dl, dl_w),
         in_axes=(1, 1), out_axes=1)                   # (P, B, J) -> (P, B)
 
     e0, _, _ = energy_all(opt0, prio0)
@@ -497,14 +572,17 @@ def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
 
     def step(state, it):
         def propose(key, opt_p, prio_p, n_opts_p, n_real_p):
-            # mirrors _sa_scan's per-iteration key schedule exactly
+            # mirrors _sa_scan's per-iteration key schedule exactly; the
+            # clamp keeps fully masked bucket-padding problems (n_real=0)
+            # mutating their own inert slot 0 only
+            n_mut = jnp.maximum(n_real_p, 1)
             k = jax.random.fold_in(key, it)
             k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
             del k6
-            j_opt = jax.random.randint(k1, (B,), 0, n_real_p)
+            j_opt = jax.random.randint(k1, (B,), 0, n_mut)
             new_o = jax.random.randint(k2, (B,), 0, jnp.take(n_opts_p, j_opt))
             opt_p = opt_p.at[jnp.arange(B), j_opt].set(new_o)
-            j_pr = jax.random.randint(k3, (B,), 0, n_real_p)
+            j_pr = jax.random.randint(k3, (B,), 0, n_mut)
             jitter = jax.random.normal(k4, (B,)) * cfg.prio_sigma
             prio_p = prio_p.at[jnp.arange(B), j_pr].add(jitter)
             return opt_p, prio_p, jax.random.uniform(k5, (B,))
@@ -525,7 +603,16 @@ def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
         jbest_sum = jnp.where(jbetter, prop_sum, state["jbest_sum"])
 
         dE = e - state["e"]
-        accept = (dE < 0) | (jnp.exp(-dE / jnp.maximum(state["T"], 1e-9)) > u)
+        if cfg.joint_accept:
+            # joint welfare: one verdict per chain on the summed delta,
+            # drawn from tenant 0's uniform stream, applied to all tenants
+            dE_sum = dE.sum(axis=0)                                  # (B,)
+            acc = (dE_sum < 0) | (
+                jnp.exp(-dE_sum / jnp.maximum(state["T"], 1e-9)) > u[0])
+            accept = jnp.broadcast_to(acc[None, :], (P_n, B))
+        else:
+            accept = (dE < 0) | (
+                jnp.exp(-dE / jnp.maximum(state["T"], 1e-9)) > u)
         opt = jnp.where(accept[:, :, None], opt, state["opt"])
         prio = jnp.where(accept[:, :, None], prio, state["prio"])
         e = jnp.where(accept, e, state["e"])
@@ -566,17 +653,23 @@ def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
 
 @partial(jax.jit, static_argnames=("cfg", "dp_static"))
 def _run_sa_shared_jit(dp_arrays, dp_static, n_real, goal_w, ref_M, ref_C,
-                       cfg, opt0, prio0, pkeys):
+                       dl, dl_w, cfg, opt0, prio0, pkeys):
+    # dt rides in dp_arrays (traced): it scales with the joint reference
+    # makespan, and baking it into the static signature would force a
+    # fresh trace on every arrival — the exact cost bucketed admission
+    # exists to avoid.  Only the grid length T stays static.
     P_n, _, J = opt0.shape
     dp = DeviceProblem(*dp_arrays, *dp_static)
     sdp = SharedDeviceProblem(dp, P_n, J, n_real)
-    return _sa_scan_shared(sdp, goal_w, ref_M, ref_C, cfg, opt0, prio0, pkeys)
+    return _sa_scan_shared(sdp, goal_w, ref_M, ref_C, dl, dl_w, cfg,
+                           opt0, prio0, pkeys)
 
 
 def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
                              goal: Goal, cfg: Optional[VecConfig] = None,
                              refs: Optional[Sequence[Tuple[float, float]]] = None,
-                             ) -> Tuple[List[Solution], List[str]]:
+                             goals: Optional[Sequence[Goal]] = None,
+                             bucket_p=None) -> Tuple[List[Solution], List[str]]:
     """Anneal P tenant problems against ONE shared cluster capacity.
 
     The coupled counterpart of ``vectorized_anneal_many``: instead of P
@@ -590,6 +683,11 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
     Returns ``(solutions, joint_errors)`` where ``joint_errors`` is the
     event-exact joint validation (empty unless some tenant is structurally
     infeasible, e.g. a single task demanding more than the whole cluster).
+
+    ``goals`` gives each tenant its own objective weights (SLA classes);
+    ``bucket_p`` pads the problem axis to a power-of-two bucket (padded
+    slots fully masked and provably inert in the joint decode) so a
+    streaming arrival inside the bucket reuses the live JIT cache entry.
     """
     cfg = cfg or VecConfig()
     problems = list(problems)
@@ -599,31 +697,40 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
         refs = [reference_point(p, cluster) for p in problems]
     refs = list(refs)
     assert len(refs) == len(problems)
+    goals = list(goals) if goals is not None else [goal] * len(problems)
+    assert len(goals) == len(problems)
     ref_M = np.asarray([r[0] for r in refs])
     ref_C = np.asarray([r[1] for r in refs])
 
     packed = pack_problems(problems, cluster.num_resources,
-                           shared_capacity=True)
+                           shared_capacity=True, bucket_p=bucket_p)
     layout = packed.shared_layout()
     joint = layout.joint_problem()
     joint_ref = reference_point(joint, cluster)
     sdp = SharedDeviceProblem.build(layout, cluster, joint_ref[0], cfg)
     P_n = packed.num_problems
+    P_pad = packed.padded_problems
+    ref_Mp, ref_Cp = _pad_refs(ref_M, ref_C, P_pad)
+    goal_w, dl, dl_w = _goal_arrays(goals, P_pad)
+    ref_Mj = jnp.asarray(ref_Mp, jnp.float32)
+    ref_Cj = jnp.asarray(ref_Cp, jnp.float32)
 
     opt0, prio0, pkeys = _init_chains(packed, cfg)
 
     dp_arrays = (sdp.dp.dur_bins, sdp.dp.demands, sdp.dp.costs, sdp.dp.n_opts,
-                 sdp.dp.pred_mask, sdp.dp.release_bins, sdp.dp.caps)
-    state = _run_sa_shared_jit(dp_arrays, (sdp.dp.dt, sdp.dp.T), sdp.n_real,
-                               goal.w, jnp.asarray(ref_M, jnp.float32),
-                               jnp.asarray(ref_C, jnp.float32),
+                 sdp.dp.pred_mask, sdp.dp.release_bins, sdp.dp.caps,
+                 jnp.float32(sdp.dp.dt))
+    state = _run_sa_shared_jit(dp_arrays, (sdp.dp.T,), sdp.n_real,
+                               goal_w, ref_Mj, ref_Cj, dl, dl_w,
                                cfg, opt0, prio0, pkeys)
 
-    best_idx = np.asarray(jnp.argmin(state["best_e"], axis=1))      # (P,)
-    best_opt = np.asarray(state["best_opt"])                        # (P, B, J)
+    best_idx = np.asarray(jnp.argmin(state["best_e"], axis=1))      # (P',)
+    best_opt = np.asarray(state["best_opt"])                        # (P', B, J)
     best_prio = np.asarray(state["best_prio"])
 
-    # two candidate assemblies:
+    # two candidate assemblies (both span the FULL padded batch — the
+    # coupled decode is shaped for it; padding rows are inert and add the
+    # same constant to both sums, so the decision is bucket-invariant):
     # (a) selfish — each tenant's best chain. Under light contention (and
     #     exactly in the disjoint degenerate case) these compose; under
     #     heavy contention each best was recorded against competitors who
@@ -633,15 +740,13 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
     # so the comparison is apples-to-apples): in the disjoint case the
     # selfish assembly provably minimizes every tenant's energy, the strict
     # "<" keeps it, and bit-for-bit parity with isolated mode survives.
-    opt_self = jnp.asarray(best_opt[np.arange(P_n), best_idx])      # (P, J)
-    prio_self = jnp.asarray(best_prio[np.arange(P_n), best_idx])
+    opt_self = jnp.asarray(best_opt[np.arange(P_pad), best_idx])    # (P', J)
+    prio_self = jnp.asarray(best_prio[np.arange(P_pad), best_idx])
     b_star = int(np.asarray(jnp.argmin(state["jbest_sum"])))
     opt_coh = state["jbest_opt"][:, b_star]
     prio_coh = state["jbest_prio"][:, b_star]
     e2, _, _ = jax.vmap(
-        partial(shared_chain_energy, sdp, goal.w,
-                jnp.asarray(ref_M, jnp.float32),
-                jnp.asarray(ref_C, jnp.float32)))(
+        partial(shared_chain_energy, sdp, goal_w, ref_Mj, ref_Cj, dl, dl_w))(
         jnp.stack([opt_self, opt_coh]), jnp.stack([prio_self, prio_coh]))
     sums = np.asarray(e2.sum(axis=1))                               # (2,)
     if sums[1] < sums[0]:
@@ -671,7 +776,7 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
         cost = schedule_cost(prob, oi, cluster.prices_per_sec)
         mk = float(f.max())
         sol = Solution(oi, s, f, mk, cost,
-                       goal.energy(mk, cost, ref_M[p], ref_C[p]),
+                       goals[p].energy(mk, cost, ref_M[p], ref_C[p]),
                        solver="agora-vectorized-shared")
         sol.solve_seconds = elapsed   # batch wall time: one coupled dispatch
         sols.append(sol)
@@ -724,10 +829,14 @@ def vectorized_anneal(problem: FlatProblem, cluster: Cluster, goal: Goal,
 
     keys = ["opt", "prio", "e", "best_opt", "best_prio", "best_e"]
 
+    sla = math.isfinite(goal.deadline) and goal.deadline_weight > 0
+    dl_s = goal.deadline if sla else 0.0
+    dlw_s = goal.deadline_weight if sla else 0.0
+
     def shard_fn(opt0, prio0):
         dpl = DeviceProblem(*dp_arrays, *dp_static)
-        st = _sa_scan(dpl, goal.w, ref_M, ref_C, cfg, opt0, prio0,
-                      k3, axis_name=axis)
+        st = _sa_scan(dpl, goal.w, ref_M, ref_C, dl_s, dlw_s, cfg,
+                      opt0, prio0, k3, axis_name=axis)
         return tuple(st[k] for k in keys)  # scalars (T) stay device-local
 
     from repro.compat import shard_map

@@ -1,1 +1,13 @@
-from repro.flow.executor import FlowConfig, FlowResult, FlowRunner  # noqa: F401
+from repro.flow.executor import (FlowConfig, FlowResult, FlowRunner,
+                                 MultiTenantRunner, TenantRecord)
+from repro.flow.streaming import (SLA_BEST_EFFORT, SLA_CLASSES,
+                                  SLA_GUARANTEED, SLA_STANDARD, StreamConfig,
+                                  StreamingRunner, StreamRecord,
+                                  TenantRequest, deadline_hit_rate)
+
+__all__ = [
+    "FlowConfig", "FlowResult", "FlowRunner", "MultiTenantRunner",
+    "TenantRecord", "SLA_BEST_EFFORT", "SLA_CLASSES", "SLA_GUARANTEED",
+    "SLA_STANDARD", "StreamConfig", "StreamingRunner", "StreamRecord",
+    "TenantRequest", "deadline_hit_rate",
+]

@@ -48,6 +48,18 @@ class FlowConfig:
     seed: int = 0
     state_path: Optional[str] = None   # workflow checkpoint file
     replan_on_straggler: bool = False
+    # streaming control plane: first launches at virtual time >= the horizon
+    # are withheld (tasks already launched run to completion, retries and
+    # speculative duplicates included) so the control plane can re-plan the
+    # unlaunched remainder on the next arrival instead of draining the batch
+    launch_horizon: float = math.inf
+    # tasks exempt from the horizon (guaranteed-class tenants keep
+    # launching through a cut: yielding is for classes that can afford it)
+    horizon_exempt: Tuple[int, ...] = ()
+    # gate launches on ACTUAL pool availability at dispatch time (planned
+    # starts alone cannot protect the pool once runtime noise inflates a
+    # predecessor's duration past its planned window)
+    enforce_capacity: bool = False
 
 
 def _backoff_delay(cfg: FlowConfig, attempt: int) -> float:
@@ -83,6 +95,9 @@ class FlowResult:
     task_retries: Dict[int, int] = dataclasses.field(default_factory=dict)
     task_speculations: Dict[int, int] = dataclasses.field(default_factory=dict)
     task_cost: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # tasks withheld by cfg.launch_horizon: never launched, not billed —
+    # the streaming control plane re-plans and re-dispatches them later
+    unlaunched: List[int] = dataclasses.field(default_factory=list)
 
 
 class FlowRunner:
@@ -150,6 +165,12 @@ class FlowRunner:
             preds[b].append(a)
         self._load_state()
 
+        dur_all, dem_all, _, _ = problem.option_arrays()
+        oi = self.plan.solution.option_idx
+        task_dem = dem_all[np.arange(J), oi] if J else dem_all.reshape(0, -1)
+        caps = np.asarray(self.plan.cluster.caps, float)
+        usage = np.zeros(len(caps))        # live demand of running attempts
+
         clock = 0.0
         # event heap: (time, seq, kind, payload)
         heap: List[Tuple[float, int, str, Any]] = []
@@ -160,6 +181,7 @@ class FlowRunner:
         running: Dict[int, List[TaskRun]] = {}
         backing_off: set = set()           # tasks waiting out a retry delay
         backoff_idle: Dict[int, float] = {}  # per-task accumulated delay
+        capacity_waiting: set = set()      # ready tasks the pool cannot fit
 
         def push(t, kind, payload):
             nonlocal seq
@@ -169,7 +191,8 @@ class FlowRunner:
         def ready_tasks():
             out = []
             for j in range(J):
-                if j in self.done or j in running or j in backing_off:
+                if (j in self.done or j in running or j in backing_off
+                        or j in capacity_waiting):
                     continue
                 if all(p in self.done for p in preds[j]):
                     if float(problem.release[j]) <= clock + 1e-9:
@@ -178,12 +201,30 @@ class FlowRunner:
                         push(float(problem.release[j]), "release", j)
             return out
 
+        def horizon_open(j):
+            # the launch horizon withholds FIRST launches only: an already
+            # launched task keeps its retries/duplicates so it always runs
+            # to completion within this dispatch
+            return (clock < cfg.launch_horizon - 1e-9 or attempts[j] > 0
+                    or j in cfg.horizon_exempt)
+
+        def fits(j):
+            if not cfg.enforce_capacity:
+                return True
+            if np.all(usage + task_dem[j] <= caps + 1e-6):
+                return True
+            # an empty pool is the best the executor can offer: a task too
+            # large for the whole cluster must not deadlock the workflow
+            return not running
+
         def launch(j, speculative=False):
+            nonlocal usage
             attempts[j] += 1
             dur = self._duration(j)
             fail = self._attempt_fails()
             run = TaskRun(j, attempts[j], clock, clock + dur, speculative)
             running.setdefault(j, []).append(run)
+            usage = usage + task_dem[j]
             if self.cfg.mode == "real" and j in self.fns:
                 t0 = time.monotonic()
                 try:
@@ -205,8 +246,39 @@ class FlowRunner:
             self._log(clock, f"launch task {j} attempt {attempts[j]}"
                              f"{' (speculative)' if speculative else ''}")
 
-        for j in ready_tasks():
+        def try_launch(j):
+            """Dispatch-time gates: launch horizon, then ACTUAL pool
+            availability (cfg.enforce_capacity) — planned starts alone
+            cannot protect the pool once realized durations drift."""
+            if not horizon_open(j):
+                return
+            if not fits(j):
+                if j not in capacity_waiting:
+                    capacity_waiting.add(j)
+                    self._log(clock, f"task {j} waits for pool capacity")
+                return
+            capacity_waiting.discard(j)
             launch(j)
+
+        def release_usage(runs):
+            nonlocal usage
+            for r in runs:
+                usage = usage - task_dem[r.task]
+
+        def rescan_capacity():
+            # deterministic wake order: planned start, then index
+            for j in sorted(capacity_waiting,
+                            key=lambda x: (float(self.plan.solution.start[x]),
+                                           x)):
+                if (j not in self.done and j not in running
+                        and j not in backing_off and horizon_open(j)
+                        and all(p in self.done for p in preds[j])
+                        and fits(j)):
+                    capacity_waiting.discard(j)
+                    launch(j)
+
+        for j in ready_tasks():
+            try_launch(j)
 
         while heap:
             clock, _, kind, payload = heapq.heappop(heap)
@@ -215,8 +287,9 @@ class FlowRunner:
                     backing_off.discard(payload)
                 if payload not in self.done and payload not in running \
                         and payload not in backing_off \
+                        and payload not in capacity_waiting \
                         and all(p in self.done for p in preds[payload]):
-                    launch(payload)
+                    try_launch(payload)
                 continue
             run = payload
             j = run.task
@@ -224,7 +297,7 @@ class FlowRunner:
                 if j in self.done or j not in running:
                     continue
                 still = [r for r in running[j] if r.attempt == run.attempt]
-                if still and cfg.mode == "sim":
+                if still and cfg.mode == "sim" and fits(j):
                     self.speculations += 1
                     task_specs[j] += 1
                     self._log(clock, f"speculative duplicate of task {j}")
@@ -235,6 +308,7 @@ class FlowRunner:
             if j in self.done:
                 continue  # a duplicate already finished
             if kind == "fail":
+                release_usage([r for r in running[j] if r is run])
                 running[j] = [r for r in running[j] if r is not run]
                 self.retries += 1
                 task_retries[j] += 1
@@ -251,32 +325,38 @@ class FlowRunner:
                         backoff_idle[j] = backoff_idle.get(j, 0.0) + delay
                         push(clock + delay, "retry", j)
                     else:
-                        launch(j)
+                        try_launch(j)
+                rescan_capacity()
                 continue
             # finish
             self.done[j] = clock
+            release_usage(running.get(j, ()))
             running.pop(j, None)
             self._log(clock, f"task {j} finished")
             self._save_state()
+            rescan_capacity()
             for k in ready_tasks():
-                launch(k)
+                try_launch(k)
 
         makespan = max(self.done.values()) - float(problem.release.min()) \
             if self.done else 0.0
         # realized cost: demands * realized duration * prices
-        dur_all, dem_all, _, _ = problem.option_arrays()
-        oi = self.plan.solution.option_idx
         prices = self.plan.cluster.prices_per_sec
         cost = 0.0
         task_cost: Dict[int, float] = {}
-        for j in range(J):
+        for j in sorted(self.done):
             # backoff windows hold no resources -> not billed
             d = self.done[j] - self.started[j] - backoff_idle.get(j, 0.0)
             task_cost[j] = float((dem_all[j, oi[j]] * prices).sum() * d)
             cost += task_cost[j]
+        unlaunched = sorted(j for j in range(J) if j not in self.done)
+        if unlaunched:
+            self._log(clock, f"{len(unlaunched)} tasks withheld at the "
+                             f"launch horizon")
         return FlowResult(makespan, cost, dict(self.started), dict(self.done),
                           self.retries, self.speculations, self.replans,
-                          self.events, task_retries, task_specs, task_cost)
+                          self.events, task_retries, task_specs, task_cost,
+                          unlaunched)
 
 
 # ---------------------------------------------------------------------------

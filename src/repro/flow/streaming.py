@@ -1,0 +1,645 @@
+"""SLA-aware streaming control plane over the shared capacity pool.
+
+The third pillar of the multi-tenant story (after batched planning, PR 1,
+and shared-capacity co-scheduling, PR 2): tenants now ARRIVE over time,
+carry an SLA class, and the control plane re-plans the live batch instead
+of draining fixed rolling-horizon windows.
+
+Three mechanisms compose:
+
+* bucketed admission — every planning round is solved through
+  ``Agora.plan_many(bucket_p=...)``: the problem axis is padded to a
+  power-of-two bucket, so a tenant arriving mid-stream re-plans under the
+  SAME JIT cache entry (zero re-tracing) as long as it lands inside the
+  current bucket.  Padded slots are fully masked and bit-for-bit inert.
+* deadline classes — each tenant's SLA class maps to a per-tenant ``Goal``
+  (``guaranteed`` carries a deadline hinge term, ``standard`` the base
+  blend, ``best_effort`` a cost-leaning blend) that flows through
+  ``plan_many(goals=...)`` into the coupled annealer's per-tenant energy.
+* preemptive re-planning — each dispatch runs only until the next arrival
+  (``FlowConfig.launch_horizon``): in-flight tasks drain, not-yet-launched
+  tasks return to the control plane and are re-planned together with the
+  arrival.  When a guaranteed tenant's planned completion would overshoot
+  its deadline, not-yet-launched best-effort tenants are preempted out of
+  the round and re-enqueued under the executor's capped-exponential
+  backoff machinery.
+
+The FIFO no-SLA baseline (``StreamConfig(sla_aware=False,
+replan_on_arrival=False)``) degenerates to PR 2's rolling-horizon loop:
+equal goals, full-drain rounds, no preemption — the comparison the
+``bench_streaming`` deadline-hit-rate gate is built on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.agora import Agora, Plan, combine_plans
+from repro.core.dag import DAG
+from repro.core.objectives import Goal
+from repro.flow.executor import (FlowConfig, FlowResult, FlowRunner,
+                                 MultiTenantRunner, TenantRecord,
+                                 _backoff_delay)
+
+SLA_GUARANTEED = "guaranteed"
+SLA_STANDARD = "standard"
+SLA_BEST_EFFORT = "best_effort"
+SLA_CLASSES = (SLA_GUARANTEED, SLA_STANDARD, SLA_BEST_EFFORT)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantRequest:
+    """A tenant DAG submission with its SLA class.
+
+    ``deadline`` is an ABSOLUTE virtual time (same clock as
+    ``dag.release_time``); guaranteed-class requests must carry one.
+    """
+    dag: DAG
+    sla: str = SLA_STANDARD
+    deadline: float = math.inf
+
+    def __post_init__(self):
+        assert self.sla in SLA_CLASSES, self.sla
+        if self.sla == SLA_GUARANTEED:
+            assert math.isfinite(self.deadline), (
+                "guaranteed-class requests need a finite deadline")
+
+    @property
+    def name(self) -> str:
+        return self.dag.name
+
+    @property
+    def submit(self) -> float:
+        return self.dag.release_time
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Control-plane knobs (planning-side; executor noise lives in
+    ``FlowConfig``)."""
+    bucket_p: int | bool = True        # power-of-two admission buckets
+    sla_aware: bool = True             # False -> FIFO no-SLA baseline goals
+    replan_on_arrival: bool = True     # False -> full-drain rounds (FIFO)
+    overlap_rounds: bool = True        # admit at the cut, planning against
+    #                                    caps minus in-flight residual;
+    #                                    False -> quiesce until drain (FIFO)
+    guaranteed_w: float = 0.9          # makespan weight for guaranteed class
+    best_effort_w: float = 0.15        # cost-leaning weight for best effort
+    deadline_weight: float = 8.0       # hinge scale of the deadline term
+    deadline_margin: float = 0.0       # preempt when planned completion
+    #                                    > deadline - margin
+    preempt_backoff: float = 30.0      # base backoff for preempted tenants
+    #                                    (cfg.retry_backoff wins when set)
+    max_preemptions: int = 8           # per-tenant preemption cap
+    max_deferrals: int = 4             # at-risk guaranteed tenants may wait
+    #                                    for in-flight residue this many
+    #                                    times before dispatching anyway
+
+
+def sla_goal(req: TenantRequest, base: Goal, now: float,
+             sc: StreamConfig) -> Goal:
+    """Map a request's SLA class to its per-tenant planning goal.
+
+    Deadlines are absolute; the solver plans relative to the round start,
+    so the goal carries the REMAINING budget ``deadline - now``."""
+    if not sc.sla_aware or req.sla == SLA_STANDARD:
+        return base
+    if req.sla == SLA_GUARANTEED:
+        remaining = max(req.deadline - now, 1e-6)
+        return dataclasses.replace(base, w=sc.guaranteed_w,
+                                   deadline=remaining,
+                                   deadline_weight=sc.deadline_weight)
+    return dataclasses.replace(base, w=sc.best_effort_w)
+
+
+@dataclasses.dataclass
+class StreamRecord(TenantRecord):
+    """Per-tenant outcome, extended with the SLA verdict."""
+    sla: str = SLA_STANDARD
+    deadline: float = math.inf
+    deadline_met: bool = True
+    preemptions: int = 0
+    rounds: int = 0                    # planning rounds the tenant rode in
+
+
+@dataclasses.dataclass(eq=False)
+class _TenantState:
+    """Mutable control-plane state for one tenant across rounds.
+
+    Identity equality (``eq=False``): states live in batch/pending lists
+    that are filtered with ``in``/``remove``, and value equality would
+    recurse into Plan/FlatProblem numpy fields (ambiguous truth value) —
+    and could evict the WRONG tenant when two submissions carry identical
+    DAG content."""
+    req: TenantRequest
+    remaining: List[int]               # original task ids still unlaunched
+    ready_at: float                    # earliest next admission time
+    done: Dict[int, float] = dataclasses.field(default_factory=dict)
+    started: Dict[int, float] = dataclasses.field(default_factory=dict)
+    cost: float = 0.0
+    retries: int = 0
+    specs: int = 0
+    plan_retries: int = 0              # rounds lost to failed validation
+    preemptions: int = 0
+    deferrals: int = 0                 # waits for in-flight residue
+    rounds: int = 0
+    first_planned: float = math.inf
+    last_plan_makespan: float = math.nan
+
+    @property
+    def name(self) -> str:
+        return self.req.name
+
+    def remainder_dag(self) -> DAG:
+        """The not-yet-launched subgraph, re-anchored at release 0 (the
+        control plane re-anchors every round at its own clock)."""
+        d0 = self.req.dag
+        remap = {o: i for i, o in enumerate(self.remaining)}
+        tasks = [d0.tasks[o] for o in self.remaining]
+        edges = [(remap[a], remap[b]) for a, b in d0.edges
+                 if a in remap and b in remap]
+        return DAG(d0.name, tasks, edges, release_time=0.0)
+
+
+class StreamingRunner(MultiTenantRunner):
+    """Arrival-driven serving loop (streaming counterpart of the rolling-
+    horizon ``MultiTenantRunner`` it extends — invalid-plan re-enqueue and
+    backoff machinery are inherited unchanged).
+
+    Each round admits every pending tenant into one bucketed batch, plans
+    it with per-tenant SLA goals, and dispatches the joint plan with a
+    launch horizon at the next arrival.  Launched tasks drain; unlaunched
+    remainders and preempted best-effort tenants come back as fresh
+    (reduced) submissions.  Every task is executed and accounted exactly
+    once across rounds."""
+
+    def __init__(self, agora: Agora, requests: Sequence[TenantRequest],
+                 cfg: Optional[FlowConfig] = None,
+                 stream: Optional[StreamConfig] = None,
+                 shared_cluster: bool = True):
+        requests = sorted(requests, key=lambda r: r.submit)
+        super().__init__(agora, [r.dag for r in requests], cfg,
+                         window=0.0, shared_cluster=shared_cluster)
+        self.requests = requests
+        self.stream = stream or StreamConfig()
+        self.preempt_events = 0
+        self.arrival_replans = 0
+        # (round_clock, [(tenant_name, plan)], FlowResult) per dispatch —
+        # the audit trail the capacity gates sweep
+        self.dispatches: List[Tuple[float, List[Tuple[str, Plan]],
+                                    FlowResult]] = []
+
+    # ------------------------------------------------------------------
+
+    def _preempt_delay(self, state: _TenantState) -> float:
+        """Backoff for a preempted tenant via the executor's capped-
+        exponential machinery; the stream-level base applies when the
+        flow config carries no retry backoff of its own."""
+        cfg = self.cfg
+        if cfg.retry_backoff <= 0:
+            cfg = dataclasses.replace(cfg,
+                                      retry_backoff=self.stream.preempt_backoff)
+        return max(_backoff_delay(cfg, state.preemptions), 1e-6)
+
+    def _agora_for(self, caps_round: np.ndarray) -> Agora:
+        """An Agora planning against the ROUND's free capacity: the full
+        pool minus the residual demand of in-flight tasks from earlier
+        dispatches.  caps is a traced array on device, so round-to-round
+        capacity changes never re-trace."""
+        from repro.cluster.catalog import Cluster
+
+        base = self.agora
+        if np.allclose(caps_round, base.cluster.caps):
+            return base
+        cluster = Cluster(base.cluster.types, tuple(float(c)
+                                                    for c in caps_round))
+        return Agora(cluster, goal=base.goal, solver=base.solver,
+                     anneal_cfg=base.anneal_cfg, vec_cfg=base.vec_cfg,
+                     mesh=base.mesh)
+
+    def _plan_batch(self, clock: float, batch: List[_TenantState],
+                    agora: Optional[Agora] = None):
+        """One bucketed, SLA-weighted planning round for the batch."""
+        sc = self.stream
+        agora = agora or self.agora
+        dags = [s.remainder_dag() for s in batch]
+        goals = [sla_goal(s.req, agora.goal, clock, sc) for s in batch]
+        plans = agora.plan_many(dags, goals=goals,
+                                shared_capacity=self.shared_cluster,
+                                bucket_p=sc.bucket_p)
+        return plans
+
+    def _completion(self, plan: Plan) -> float:
+        """Planned completion of one tenant, relative to the round start
+        (shared-capacity plans live on one joint timeline)."""
+        if not plan.problem.num_tasks:
+            return 0.0
+        return float(plan.solution.finish.max())
+
+    def _at_risk(self, clock: float, state: _TenantState,
+                 plan: Plan) -> bool:
+        if state.req.sla != SLA_GUARANTEED:
+            return False
+        return (clock + self._completion(plan)
+                > state.req.deadline - self.stream.deadline_margin)
+
+    # ------------------------------------------------------------------
+
+    def _residual_caps(self, clock: float) -> np.ndarray:
+        """Free capacity at ``clock``: the pool minus every in-flight task
+        committed by earlier dispatches (launched tasks run to completion,
+        so their demand is reserved until their realized finish)."""
+        caps = np.asarray(self.agora.cluster.caps, float).copy()
+        for _, f, dem in self._executed:
+            if f > clock + 1e-9:
+                caps -= dem
+        return caps
+
+    def _next_release(self, clock: float) -> float:
+        """Next instant at which in-flight residue frees capacity."""
+        return min((f for _, f, _ in self._executed if f > clock + 1e-9),
+                   default=math.inf)
+
+    @staticmethod
+    def _structurally_fits(state: _TenantState,
+                           caps_round: np.ndarray) -> bool:
+        """Every remaining task has at least one option that fits the
+        round's free capacity — planning a tenant into a narrower sliver
+        can only fail validation and burn its retry budget."""
+        for o in state.remaining:
+            task = state.req.dag.tasks[o]
+            if not any(np.all(np.asarray(opt.demands) <= caps_round + 1e-9)
+                       for opt in task.options):
+                return False
+        return True
+
+    def run(self) -> List[StreamRecord]:
+        sc = self.stream
+        states = [
+            _TenantState(req=r, remaining=list(range(r.dag.num_tasks)),
+                         ready_at=r.submit)
+            for r in self.requests
+        ]
+        pending: List[_TenantState] = list(states)
+        records: List[StreamRecord] = []
+        self._executed: List[Tuple[float, float, np.ndarray]] = []
+        clock = 0.0
+        drain_end = 0.0
+        while pending:
+            clock = max(clock, min(s.ready_at for s in pending))
+            if not sc.overlap_rounds:
+                # FIFO quiesce: the next round waits for the pool to drain
+                clock = max(clock, drain_end)
+            else:
+                # overlapped rounds: admit at the cut, but step past
+                # instants where the in-flight residue saturates the pool
+                while True:
+                    if np.all(self._residual_caps(clock) > 1e-9):
+                        break
+                    nxt = min((f for _, f, _ in self._executed
+                               if f > clock + 1e-9), default=clock)
+                    if nxt <= clock:
+                        break
+                    clock = nxt
+            caps_round = np.maximum(self._residual_caps(clock), 0.0)
+            agora_r = self._agora_for(caps_round)
+            batch = [s for s in pending if s.ready_at <= clock + 1e-9]
+            pending = [s for s in pending if s.ready_at > clock + 1e-9]
+            # capacity-fragmentation guard: a tenant none of whose options
+            # fit the round's free sliver waits for the next residue
+            # release instead of burning its plan-retry budget
+            release = self._next_release(clock)
+            if math.isfinite(release):
+                blocked = [s for s in batch
+                           if not self._structurally_fits(s, caps_round)]
+                for s in blocked:
+                    s.ready_at = release
+                    pending.append(s)
+                batch = [s for s in batch if s not in blocked]
+            if not batch:
+                continue
+            for s in batch:
+                s.rounds += 1
+                s.first_planned = min(s.first_planned, clock)
+            plans = self._plan_batch(clock, batch, agora_r)
+            self.rounds.append(len(batch))
+            self.events.append(
+                f"[t={clock:9.1f}] round {len(self.rounds)}: planned "
+                f"{len(batch)} tenants in one bucketed batch "
+                f"({sum(p.problem.num_tasks for p in plans)} tasks, "
+                f"free caps {np.round(caps_round, 1).tolist()})")
+
+            # ---- plan -> validate -> adjust, to a stable batch ---------
+            # every adjustment (invalid exclusion, preemption, deferral)
+            # removes a tenant and re-plans the survivors, and the NEW
+            # plan set is validated and risk-checked again — the batch
+            # that dispatches is always a validated fixed point.  The loop
+            # terminates because each iteration shrinks the batch.
+            good: List[Tuple[_TenantState, Plan]] = list(zip(batch, plans))
+            while good:
+                changed = False
+                # (a) invalid plans: re-enqueue with backoff (inherited)
+                bad = set(self._invalid_tenants([p for _, p in good]))
+                if bad:
+                    changed = True
+                    kept: List[Tuple[_TenantState, Plan]] = []
+                    for i, (s, plan) in enumerate(good):
+                        if i not in bad:
+                            kept.append((s, plan))
+                            continue
+                        s.plan_retries += 1
+                        if s.plan_retries > self.cfg.max_retries:
+                            self.events.append(
+                                f"[t={clock:9.1f}] tenant {s.name}: plan "
+                                f"invalid after {s.plan_retries} rounds — "
+                                f"dropped")
+                            records.append(
+                                self._record(s, math.inf, failed=True))
+                            continue
+                        # backoff floored at the next residue release:
+                        # retrying an invalid plan against the same free
+                        # sliver cannot succeed
+                        delay = max(
+                            _backoff_delay(self.cfg, s.plan_retries), 1e-6)
+                        release = self._next_release(clock)
+                        ready = max(
+                            clock + delay,
+                            release if math.isfinite(release) else clock)
+                        self.events.append(
+                            f"[t={clock:9.1f}] tenant {s.name}: plan failed "
+                            f"joint validation — re-enqueued (t={ready:.1f})")
+                        s.ready_at = ready
+                        pending.append(s)
+                    good = kept
+                # (b) deadline risk: preempt ONE not-yet-launched best-
+                # effort tenant (the largest planned load frees the most
+                # capacity), then re-plan and re-check — fresh plans decide
+                # whether further evictions are actually needed
+                if not changed and sc.sla_aware and good:
+                    risky = [s for s, p in good
+                             if self._at_risk(clock, s, p)]
+                    victims = [(s, p) for s, p in good
+                               if s.req.sla == SLA_BEST_EFFORT
+                               and s.preemptions < sc.max_preemptions]
+                    if risky and victims:
+                        changed = True
+                        victim, _ = max(victims,
+                                        key=lambda t: t[1].solution.cost)
+                        good = [(s, p) for s, p in good if s is not victim]
+                        victim.preemptions += 1
+                        self.preempt_events += 1
+                        delay = self._preempt_delay(victim)
+                        victim.ready_at = clock + delay
+                        pending.append(victim)
+                        self.events.append(
+                            f"[t={clock:9.1f}] preempted best-effort tenant "
+                            f"{victim.name} for deadline risk of "
+                            f"{[s.name for s in risky]} "
+                            f"(backoff {delay:.1f}s)")
+                # (c) still at risk with residue in flight: wait for it.
+                # A static capacity snapshot cannot see the pool refilling
+                # as in-flight tasks drain, so an at-risk guaranteed tenant
+                # defers to the next residue-release event and re-plans
+                # with the freed capacity (bounded by max_deferrals)
+                if (not changed and sc.sla_aware and sc.overlap_rounds
+                        and good):
+                    residue_next = self._next_release(clock)
+                    if math.isfinite(residue_next):
+                        for s, p in list(good):
+                            if (s.req.sla == SLA_GUARANTEED
+                                    and s.deferrals < sc.max_deferrals
+                                    and self._at_risk(clock, s, p)
+                                    and residue_next < s.req.deadline):
+                                changed = True
+                                good.remove((s, p))
+                                s.deferrals += 1
+                                s.ready_at = residue_next
+                                pending.append(s)
+                                self.events.append(
+                                    f"[t={clock:9.1f}] deferred guaranteed "
+                                    f"tenant {s.name} to "
+                                    f"t={residue_next:.1f} (at risk; "
+                                    f"waiting for in-flight residue)")
+                if not changed:
+                    break
+                if good:
+                    # survivors were co-scheduled around evicted tenants'
+                    # usage — re-plan so the next validation/risk check
+                    # sees the actual dispatchable staggering
+                    replans = self._plan_batch(
+                        clock, [s for s, _ in good], agora_r)
+                    good = list(zip([s for s, _ in good], replans))
+                    self.arrival_replans += 1
+                    self.events.append(
+                        f"[t={clock:9.1f}] re-planned {len(good)} tenants "
+                        f"after preemption/exclusion")
+            if not good:
+                continue
+
+            # ---- dispatch until the next deadline-bearing arrival -----
+            # only fresh GUARANTEED submissions cut the horizon: yielding
+            # the pool costs the yielding tenants real time, so the cut is
+            # paid exactly when it buys deadline protection.  Backoff
+            # returns of preempted/re-enqueued tenants never cut — they
+            # wait for the next natural round.
+            fresh = [s for s in pending if s.rounds == 0]
+            if sc.sla_aware:
+                cuts = [s.ready_at for s in fresh
+                        if s.req.sla == SLA_GUARANTEED]
+            else:
+                cuts = [s.ready_at for s in fresh]
+            next_cut = min(cuts, default=math.inf)
+            horizon = math.inf
+            if sc.replan_on_arrival and math.isfinite(next_cut):
+                horizon = max(next_cut - clock, 0.0)
+            res = self._dispatch(clock, good, horizon)
+            if res.task_finish:
+                drain_end = clock + max(res.task_finish.values())
+            else:
+                # nothing cleared the horizon (all planned starts beyond
+                # it): jump to the cut so the next round makes progress
+                drain_end = next_cut
+            # commit this round's realized intervals: later rounds reserve
+            # the in-flight residue out of their planning capacity (same
+            # accounting the zero-violation gate audits)
+            self._executed.extend(self._intervals_of(*self.dispatches[-1]))
+            requeue_at = next_cut if math.isfinite(next_cut) else drain_end
+            pending.extend(self._merge(clock, good, res, requeue_at, records))
+        return records
+
+    # ------------------------------------------------------------------
+
+    def _dispatch(self, clock: float, good, horizon: float) -> FlowResult:
+        rnd = len(self.rounds)
+        # guaranteed tenants launch through the cut: their plan IS the
+        # deadline protection, so only lower classes yield at the horizon
+        exempt: List[int] = []
+        if self.stream.sla_aware:
+            off = 0
+            for s, p in good:
+                if s.req.sla == SLA_GUARANTEED:
+                    exempt.extend(range(off, off + p.problem.num_tasks))
+                off += p.problem.num_tasks
+        fcfg = dataclasses.replace(self._tenant_cfg(f"round{rnd}", rnd),
+                                   launch_horizon=horizon,
+                                   horizon_exempt=tuple(exempt))
+        if self.shared_cluster:
+            joint = combine_plans([p for _, p in good])
+            # planned starts gate launches: the joint schedule's staggering
+            # IS the capacity arbitration (and with enforce_capacity the
+            # executor re-checks the pool at dispatch time)
+            joint.problem.release = np.asarray(joint.solution.start,
+                                               float).copy()
+            res = FlowRunner(joint, fcfg).run()
+        else:
+            res = self._run_isolated(good, fcfg)
+        self.dispatches.append((clock, [(s.name, p) for s, p in good], res))
+        self.events.append(
+            f"[t={clock:9.1f}] dispatch: {sum(p.problem.num_tasks for _, p in good)} "
+            f"tasks, horizon={horizon:.1f}s, finished={len(res.task_finish)}, "
+            f"withheld={len(res.unlaunched)}, retries={res.retries}")
+        return res
+
+    def _run_isolated(self, good, fcfg: FlowConfig) -> FlowResult:
+        """Isolated-quota dispatch: per-tenant runs merged into one joint-
+        indexed FlowResult so the accounting path is shared."""
+        off = 0
+        merged = FlowResult(0.0, 0.0, {}, {}, 0, 0, 0, [])
+        for k, (s, plan) in enumerate(good):
+            guaranteed = (self.stream.sla_aware
+                          and s.req.sla == SLA_GUARANTEED)
+            res = FlowRunner(plan, dataclasses.replace(
+                fcfg, seed=fcfg.seed + 7919 * k,
+                horizon_exempt=tuple(range(plan.problem.num_tasks))
+                if guaranteed else ())).run()
+            for j, t in res.task_finish.items():
+                merged.task_finish[off + j] = t
+                merged.task_start[off + j] = res.task_start[j]
+                merged.task_cost[off + j] = res.task_cost[j]
+                merged.task_retries[off + j] = res.task_retries[j]
+                merged.task_speculations[off + j] = res.task_speculations[j]
+            merged.unlaunched.extend(off + j for j in res.unlaunched)
+            merged.retries += res.retries
+            merged.speculations += res.speculations
+            merged.makespan = max(merged.makespan, res.makespan)
+            merged.cost += res.cost
+            off += plan.problem.num_tasks
+        return merged
+
+    def _merge(self, clock: float, good, res: FlowResult, requeue_at: float,
+               records: List[StreamRecord]) -> List[_TenantState]:
+        """Fold one dispatch back into tenant states — each task accounted
+        EXACTLY once across rounds — and return re-enqueued remainders."""
+        requeue: List[_TenantState] = []
+        off = 0
+        for s, plan in good:
+            Jr = plan.problem.num_tasks
+            for li, orig in enumerate(s.remaining):
+                j = off + li
+                if j not in res.task_finish:
+                    continue
+                assert orig not in s.done, (s.name, orig)
+                s.done[orig] = clock + res.task_finish[j]
+                s.started[orig] = clock + res.task_start[j]
+                s.cost += res.task_cost[j]
+                s.retries += res.task_retries.get(j, 0)
+                s.specs += res.task_speculations.get(j, 0)
+            s.remaining = [o for o in s.remaining if o not in s.done]
+            s.last_plan_makespan = plan.makespan
+            off += Jr
+            if s.remaining:
+                # unlaunched remainder: back to the control plane, eligible
+                # at the cut — but never before its own in-flight
+                # predecessors drain (re-planning a task ahead of a live
+                # pred would break causality)
+                s.ready_at = max(requeue_at,
+                                 max(s.done.values(), default=0.0))
+                requeue.append(s)
+            else:
+                records.append(self._record(s, max(s.done.values())))
+        return requeue
+
+    def _record(self, s: _TenantState, finished: float,
+                failed: bool = False) -> StreamRecord:
+        req = s.req
+        realized = (finished - min(s.started.values()) if s.started
+                    else math.inf)
+        return StreamRecord(
+            name=s.name, submitted=req.submit,
+            planned_at=s.first_planned if math.isfinite(s.first_planned)
+            else req.submit,
+            finished=finished,
+            turnaround=finished - req.submit,
+            planned_makespan=s.last_plan_makespan,
+            realized_makespan=realized,
+            cost=s.cost, retries=s.retries, speculations=s.specs,
+            plan_retries=s.plan_retries, failed=failed,
+            sla=req.sla, deadline=req.deadline,
+            deadline_met=(not failed) and finished <= req.deadline + 1e-6,
+            preemptions=s.preemptions, rounds=s.rounds)
+
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _intervals_of(clock: float, plans, res: FlowResult):
+        """(abs_start, abs_finish, demand) for every task one dispatch
+        executed; ``plans`` is the [(name, Plan)] list in joint slot
+        order.  Single source of truth for BOTH the residual-capacity
+        reservation (``_executed``) and the violation audit
+        (``realized_intervals``)."""
+        out: List[Tuple[float, float, np.ndarray]] = []
+        off = 0
+        for _, plan in plans:
+            prob = plan.problem
+            _, dem_all, _, _ = prob.option_arrays()
+            oi = plan.solution.option_idx
+            for j in range(prob.num_tasks):
+                jj = off + j
+                if jj in res.task_finish:
+                    out.append((clock + res.task_start[jj],
+                                clock + res.task_finish[jj],
+                                dem_all[j, oi[j]]))
+            off += prob.num_tasks
+        return out
+
+    def realized_intervals(self):
+        """All executed task intervals across rounds, on the absolute
+        clock: (start (N,), finish (N,), demands (N, M)).  The zero-
+        violation gate sweeps these against the global capacity vector."""
+        triples = [t for disp in self.dispatches
+                   for t in self._intervals_of(*disp)]
+        M = self.agora.cluster.num_resources
+        if not triples:
+            return (np.zeros(0), np.zeros(0), np.zeros((0, M)))
+        return (np.asarray([t[0] for t in triples]),
+                np.asarray([t[1] for t in triples]),
+                np.asarray([t[2] for t in triples]))
+
+
+def capacity_violations(start: np.ndarray, finish: np.ndarray,
+                        demands: np.ndarray, caps: np.ndarray) -> List[str]:
+    """Event-exact sweep of realized intervals against the global caps."""
+    errs: List[str] = []
+    for pt in np.unique(np.concatenate([start, finish])):
+        active = (start <= pt + 1e-12) & (pt + 1e-12 < finish)
+        usage = (demands[active].sum(axis=0) if active.any()
+                 else np.zeros(len(caps)))
+        if np.any(usage > caps + 1e-6):
+            over = np.flatnonzero(usage > caps + 1e-6)
+            errs.append(f"realized capacity violated at t={pt} "
+                        f"(resources {over.tolist()})")
+            break
+    return errs
+
+
+def deadline_hit_rate(records: Sequence[StreamRecord],
+                      sla: str = SLA_GUARANTEED) -> float:
+    """Fraction of ``sla``-class tenants that met their deadline."""
+    cls = [r for r in records if getattr(r, "sla", None) == sla
+           and math.isfinite(r.deadline)]
+    if not cls:
+        return 1.0
+    return sum(r.deadline_met for r in cls) / len(cls)

@@ -149,6 +149,78 @@ def test_backoff_not_bypassed_by_sibling_finish():
     assert res.cost == pytest.approx(float(prices[0]) * 40.0)
 
 
+def _release_gated_plan():
+    """Two independent tasks on a 1-wide pool, planned back to back: t0 at
+    [0, 10), t1 release-gated to its planned start 10.  Any runtime noise
+    stretching t0 past t=10 makes the planned staggering a lie."""
+    from repro.cluster.catalog import Cluster, InstanceType
+    from repro.core.agora import Plan
+    from repro.core.dag import DAG, Task, TaskOption, flatten
+    from repro.core.objectives import Solution
+
+    cluster = Cluster((InstanceType("r0", 1, 1, 3.6),), (1,))
+    tasks = [Task("a", [TaskOption("o", 10.0, (1.0,), 10.0)]),
+             Task("b", [TaskOption("o", 10.0, (1.0,), 10.0)])]
+    prob = flatten([DAG("d", tasks, [])], 1)
+    prob.release = np.asarray([0.0, 10.0])
+    sol = Solution(np.zeros(2, np.int64), np.asarray([0.0, 10.0]),
+                   np.asarray([10.0, 20.0]), 20.0, 20.0)
+    return Plan(prob, sol, Goal.balanced(), cluster, (20.0, 20.0))
+
+
+def _realized_usage_ok(res, plan):
+    """Event sweep of REALIZED intervals against the cluster caps."""
+    _, dem_all, _, _ = plan.problem.option_arrays()
+    oi = plan.solution.option_idx
+    caps = plan.cluster.caps
+    starts = np.asarray([res.task_start[j] for j in sorted(res.task_finish)])
+    ends = np.asarray([res.task_finish[j] for j in sorted(res.task_finish)])
+    dems = np.asarray([dem_all[j, oi[j]] for j in sorted(res.task_finish)])
+    for pt in np.unique(np.concatenate([starts, ends])):
+        active = (starts <= pt + 1e-12) & (pt + 1e-12 < ends)
+        if active.any() and np.any(dems[active].sum(axis=0) > caps + 1e-6):
+            return False
+    return True
+
+
+def test_capacity_enforced_at_dispatch_time():
+    """Regression (ROADMAP follow-on from PR 2): planned starts alone gate
+    launches, so inflated-duration noise transiently oversubscribed the
+    shared pool.  With enforce_capacity the executor re-checks ACTUAL pool
+    availability at dispatch time and defers the launch instead."""
+    plan = _release_gated_plan()
+    # deterministic duration inflation: every attempt runs 2x its plan
+    noisy = FlowConfig(mode="sim", straggler_rate=1.0,
+                       straggler_slowdown=2.0, speculation=False, seed=0)
+    res_bad = FlowRunner(plan, noisy).run()
+    # without enforcement, t1 launches at its planned start into a full
+    # pool: 2 > 1 capacity — the realized schedule oversubscribes
+    assert not _realized_usage_ok(res_bad, plan)
+    res_ok = FlowRunner(plan, dataclasses.replace(
+        noisy, enforce_capacity=True)).run()
+    assert _realized_usage_ok(res_ok, plan)
+    # t1 was deferred to t0's actual finish (20), not its planned start
+    assert res_ok.task_start[1] == pytest.approx(20.0)
+    assert any("waits for pool capacity" in e for e in res_ok.events)
+    # all tasks still complete, exactly once
+    assert set(res_ok.task_finish) == {0, 1}
+
+
+def test_launch_horizon_withholds_unlaunched_tasks():
+    """First launches past the horizon are withheld (and not billed);
+    already launched tasks run to completion."""
+    plan = _release_gated_plan()
+    cfg = FlowConfig(mode="sim", speculation=False, launch_horizon=5.0)
+    res = FlowRunner(plan, cfg).run()
+    assert set(res.task_finish) == {0}         # t1's release is past horizon
+    assert res.unlaunched == [1]
+    assert res.cost == pytest.approx(res.task_cost[0])
+    # default horizon (inf) leaves behavior untouched
+    full = FlowRunner(plan, FlowConfig(mode="sim", speculation=False)).run()
+    assert set(full.task_finish) == {0, 1}
+    assert full.unlaunched == []
+
+
 def _infeasible_and_ok_dags():
     """One tenant with a task demanding more than the whole cluster (its
     plan can never validate) plus one well-behaved tenant."""

@@ -128,6 +128,30 @@ def test_disjoint_capacities_reproduce_isolated_bit_for_bit():
         assert a.energy == b.energy
 
 
+def test_joint_welfare_accept_flag():
+    """The flag-gated joint-welfare accept mode (one Metropolis verdict per
+    chain on the SUMMED per-tenant delta) still produces a capacity-valid
+    joint schedule; the default stays selfish so the bit-for-bit disjoint
+    invariant above is untouched."""
+    import dataclasses
+
+    rng = np.random.default_rng(11)
+    problems = _random_problems(rng)
+    caps = (3.0,) * M_RES
+    cluster = _cluster(caps)
+    cfg_joint = dataclasses.replace(CFG, joint_accept=True)
+    sols, joint_errors = vectorized_anneal_shared(problems, cluster,
+                                                  Goal.balanced(), cfg_joint)
+    assert joint_errors == []
+    assert _joint_usage_ok(problems, sols, np.asarray(caps))
+    # welfare accounting: both modes report a finite joint energy; the
+    # comparison itself is benchmarked (bench_multi_tenant --shared)
+    selfish, _ = vectorized_anneal_shared(problems, cluster,
+                                          Goal.balanced(), CFG)
+    assert np.isfinite(sum(s.energy for s in sols))
+    assert np.isfinite(sum(s.energy for s in selfish))
+
+
 def test_plan_many_shared_front_door_and_combine():
     """Agora.plan_many(shared_capacity=True): per-tenant plans validate,
     joint validation is clean, the batch shares one timeline, and

@@ -1,0 +1,294 @@
+"""Streaming control plane invariants.
+
+Property: ``plan_many`` with ``bucket_p`` enabled reproduces the unbucketed
+plans bit-for-bit for arbitrary P (isolated AND shared-capacity modes) —
+padding slots on the problem axis are provably inert.  Plus: SLA goals flow
+per tenant through the batched solvers, an arrival inside the live bucket
+re-plans without re-tracing, preempted best-effort tasks finish and are
+accounted exactly once, and SLA-aware streaming strictly beats the FIFO
+no-SLA baseline on guaranteed-class deadline hit rate.
+"""
+import math
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.cluster.catalog import Cluster, InstanceType
+from repro.core.agora import Agora
+from repro.core.dag import (DAG, Task, TaskOption, bucket_size, flatten,
+                            pack_problems)
+from repro.core.objectives import Goal
+from repro.core.vectorized import (VecConfig, vectorized_anneal_many,
+                                   vectorized_anneal_shared)
+from repro.flow.executor import FlowConfig
+from repro.flow.streaming import (SLA_BEST_EFFORT, SLA_GUARANTEED,
+                                  StreamConfig, StreamingRunner,
+                                  TenantRequest, capacity_violations,
+                                  deadline_hit_rate)
+
+CFG = VecConfig(chains=8, iters=40, grid=64, seed=0)
+J_TASKS, N_OPTS, M_RES = 5, 2, 2
+
+
+def _cluster(caps):
+    return Cluster(tuple(InstanceType(f"r{m}", 1, 1, 3.6)
+                         for m in range(len(caps))), tuple(caps))
+
+
+def _random_problems(rng, P):
+    problems = []
+    for _ in range(P):
+        tasks = []
+        for j in range(J_TASKS):
+            opts = []
+            for o in range(N_OPTS):
+                d = float(rng.uniform(5, 40))
+                dem = tuple(float(x) for x in rng.uniform(0.1, 2.0, M_RES))
+                opts.append(TaskOption(f"o{o}", d, dem, d * sum(dem)))
+            tasks.append(Task(f"t{j}", opts,
+                              default_option=int(rng.integers(0, N_OPTS))))
+        edges = [(a, b) for a in range(J_TASKS) for b in range(a + 1, J_TASKS)
+                 if rng.random() < 0.25]
+        problems.append(flatten([DAG("d", tasks, edges)], M_RES))
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# bucketed admission
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_size():
+    assert bucket_size(1, None) == 1
+    assert bucket_size(5, None) == 5          # falsy -> exact fit
+    assert bucket_size(1, True) == 1
+    assert bucket_size(3, True) == 4
+    assert bucket_size(4, True) == 4
+    assert bucket_size(5, True) == 8
+    assert bucket_size(2, 8) == 8             # int -> minimum bucket
+    assert bucket_size(9, 8) == 16
+
+
+def test_bucket_padding_slots_fully_masked():
+    rng = np.random.default_rng(0)
+    problems = _random_problems(rng, 3)
+    packed = pack_problems(problems, M_RES, bucket_p=True)
+    assert packed.num_problems == 3
+    assert packed.padded_problems == 4
+    pad = slice(3, 4)
+    assert (packed.task_mask[pad] == False).all()     # noqa: E712
+    assert (packed.num_tasks[3] == 0)
+    assert (packed.durations[pad] == 0).all()
+    assert (packed.demands[pad] == 0).all()
+    assert (packed.costs[pad] == 0).all()
+    assert (packed.n_opts[pad] == 1).all()
+    assert not packed.pred_mask[pad].any()
+    # unpack still round-trips the real problems only
+    assert len(packed.unpack(packed.release)) == 3
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), P=st.integers(1, 5))
+def test_bucketed_plans_bit_for_bit_isolated(seed, P):
+    """plan_many(bucket_p=...) == plan_many() exactly, for arbitrary P."""
+    rng = np.random.default_rng(seed)
+    problems = _random_problems(rng, P)
+    cluster = _cluster((3.0,) * M_RES)
+    base = vectorized_anneal_many(problems, cluster, Goal.balanced(), CFG)
+    for bucket in (True, 8):
+        bucketed = vectorized_anneal_many(problems, cluster, Goal.balanced(),
+                                          CFG, bucket_p=bucket)
+        for a, b in zip(base, bucketed):
+            np.testing.assert_array_equal(a.option_idx, b.option_idx)
+            np.testing.assert_array_equal(a.start, b.start)
+            np.testing.assert_array_equal(a.finish, b.finish)
+            assert a.energy == b.energy
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000), P=st.integers(2, 5))
+def test_bucketed_plans_bit_for_bit_shared(seed, P):
+    """The coupled solver is bucket-invariant too: masked problem slots are
+    inert inside the joint decode."""
+    rng = np.random.default_rng(seed)
+    problems = _random_problems(rng, P)
+    cluster = _cluster((3.0,) * M_RES)
+    base, errs0 = vectorized_anneal_shared(problems, cluster, Goal.balanced(),
+                                           CFG)
+    bucketed, errs1 = vectorized_anneal_shared(problems, cluster,
+                                               Goal.balanced(), CFG,
+                                               bucket_p=8)
+    assert errs0 == errs1
+    for a, b in zip(base, bucketed):
+        np.testing.assert_array_equal(a.option_idx, b.option_idx)
+        np.testing.assert_array_equal(a.start, b.start)
+        np.testing.assert_array_equal(a.finish, b.finish)
+        assert a.energy == b.energy
+
+
+def test_arrival_inside_bucket_reuses_jit_cache():
+    """Admitting a new tenant into the live bucket triggers NO re-trace:
+    the coupled solve's JIT cache does not grow."""
+    from repro.core.vectorized import _run_sa_shared_jit
+
+    rng = np.random.default_rng(7)
+    problems = _random_problems(rng, 4)
+    cluster = _cluster((3.0,) * M_RES)
+    vectorized_anneal_shared(problems[:2], cluster, Goal.balanced(), CFG,
+                             bucket_p=4)
+    n0 = _run_sa_shared_jit._cache_size()
+    vectorized_anneal_shared(problems[:3], cluster, Goal.balanced(), CFG,
+                             bucket_p=4)
+    vectorized_anneal_shared(problems[:4], cluster, Goal.balanced(), CFG,
+                             bucket_p=4)
+    assert _run_sa_shared_jit._cache_size() == n0
+
+
+# ---------------------------------------------------------------------------
+# SLA goals through the batched solver
+# ---------------------------------------------------------------------------
+
+
+def _speed_or_save_dag(name):
+    """One task, two options: fast-expensive (8-wide) vs slow-cheap
+    (1-wide).  Costs are demand * duration * price (r0 is $3.6/h =
+    $0.001/s) so the host reference and device energies agree.  A balanced
+    goal prefers the cheap option; a deadline goal must flip to fast."""
+    opts = [TaskOption("fast", 50.0, (8.0,), 50.0 * 8.0 * 0.001),
+            TaskOption("slow", 200.0, (1.0,), 200.0 * 1.0 * 0.001)]
+    return DAG(name, [Task("t", opts, default_option=1)], [])
+
+
+def test_per_tenant_goals_flow_through_plan_many():
+    cluster = _cluster((8.0,))
+    agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                  vec_cfg=CFG)
+    dags = [_speed_or_save_dag("relaxed"), _speed_or_save_dag("urgent")]
+    goals = [Goal.balanced(), Goal.with_deadline(100.0, w=0.9, weight=8.0)]
+    plans = agora.plan_many(dags, goals=goals)
+    assert plans[0].goal == goals[0] and plans[1].goal == goals[1]
+    # the deadline tenant flips to the fast config; the relaxed one saves
+    assert plans[0].solution.option_idx[0] == 1       # slow-cheap
+    assert plans[1].solution.option_idx[0] == 0       # fast-expensive
+    assert plans[1].makespan <= 100.0 + 1e-6
+    # host energy agrees with the per-tenant goal (deadline hinge included)
+    for plan, goal in zip(plans, goals):
+        e = goal.energy(plan.makespan, plan.cost, *plan.reference)
+        assert plan.solution.energy == e
+
+
+def test_goal_deadline_penalty():
+    g = Goal.with_deadline(100.0, w=0.5, weight=8.0)
+    assert g.deadline_penalty(90.0) == 0.0
+    assert g.deadline_penalty(150.0) == 8.0 * 50.0 / 100.0
+    assert Goal.balanced().deadline_penalty(1e9) == 0.0
+    # the hinge adds on top of the blended energy
+    base = Goal(w=0.5).energy(150.0, 10.0, 100.0, 10.0)
+    assert g.energy(150.0, 10.0, 100.0, 10.0) == base + 4.0
+
+
+# ---------------------------------------------------------------------------
+# streaming control plane
+# ---------------------------------------------------------------------------
+
+
+def _chain_dag(name, n, dur, dem, t0, price):
+    tasks = [Task(f"t{i}", [TaskOption("o", dur, (dem,), dur * dem * price)])
+             for i in range(n)]
+    return DAG(name, tasks, [(i, i + 1) for i in range(n - 1)],
+               release_time=t0)
+
+
+def _contended_stream(cluster):
+    """A long best-effort chain hogs the pool; a guaranteed tenant arrives
+    mid-flight with a deadline only met if the control plane reacts."""
+    price = float(cluster.prices_per_sec[0])
+    be = TenantRequest(_chain_dag("be", 6, 50.0, 2.0, 0.0, price),
+                       sla=SLA_BEST_EFFORT)
+    g = TenantRequest(_chain_dag("g", 2, 50.0, 3.0, 40.0, price),
+                      sla=SLA_GUARANTEED, deadline=40.0 + 130.0)
+    return [be, g]
+
+
+def _agora(cluster):
+    return Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                 vec_cfg=CFG)
+
+
+def test_streaming_beats_fifo_on_deadlines():
+    """The acceptance shape of bench_streaming, in miniature: guaranteed
+    tenants meet deadlines at a strictly higher rate than the FIFO no-SLA
+    baseline, with zero realized capacity violations in both modes."""
+    cluster = _cluster((4.0,))
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    sla = StreamingRunner(_agora(cluster), _contended_stream(cluster), cfg,
+                          StreamConfig())
+    rec_sla = sla.run()
+    fifo = StreamingRunner(_agora(cluster), _contended_stream(cluster), cfg,
+                           StreamConfig(sla_aware=False,
+                                        replan_on_arrival=False))
+    rec_fifo = fifo.run()
+    assert deadline_hit_rate(rec_sla) > deadline_hit_rate(rec_fifo)
+    assert deadline_hit_rate(rec_sla) == 1.0
+    for runner in (sla, fifo):
+        s, f, d = runner.realized_intervals()
+        assert capacity_violations(s, f, d, cluster.caps) == []
+
+
+def test_preempted_best_effort_accounted_exactly_once():
+    """Regression: a best-effort tenant preempted for deadline risk is
+    re-enqueued (backoff), finishes later, and every one of its tasks is
+    executed and billed exactly once in the merged accounting."""
+    cluster = _cluster((4.0,))
+    price = float(cluster.prices_per_sec[0])
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    # a wide risk margin forces the preemption path even though the
+    # deadline-weighted co-plan alone would meet the deadline
+    runner = StreamingRunner(_agora(cluster), _contended_stream(cluster),
+                             cfg, StreamConfig(deadline_margin=60.0))
+    records = runner.run()
+    by = {r.name: r for r in records}
+    assert runner.preempt_events >= 1
+    assert by["be"].preemptions >= 1
+    assert not by["be"].failed and math.isfinite(by["be"].finished)
+    assert by["g"].deadline_met
+    # exactly-once accounting: every task interval appears once, and the
+    # preempted tenant's bill equals its exact resource-seconds
+    s, f, d = runner.realized_intervals()
+    assert len(s) == 8                       # 6 be tasks + 2 g tasks
+    assert capacity_violations(s, f, d, cluster.caps) == []
+    np.testing.assert_allclose(by["be"].cost, 6 * 50.0 * 2.0 * price)
+    np.testing.assert_allclose(by["g"].cost, 2 * 50.0 * 3.0 * price)
+    # preemption events were logged through the backoff machinery
+    assert any("preempted best-effort tenant be" in e for e in runner.events)
+
+
+def test_partial_rounds_account_every_task_once():
+    """A guaranteed arrival cuts the horizon mid-batch: the unlaunched
+    remainder is re-planned in later rounds and no task is ever run twice
+    or dropped."""
+    cluster = _cluster((4.0,))
+    price = float(cluster.prices_per_sec[0])
+    reqs = [
+        TenantRequest(_chain_dag("a", 5, 40.0, 2.0, 0.0, price)),
+        TenantRequest(_chain_dag("b", 3, 40.0, 1.0, 60.0, price),
+                      sla=SLA_GUARANTEED, deadline=60.0 + 200.0),
+        TenantRequest(_chain_dag("c", 3, 40.0, 1.0, 130.0, price)),
+    ]
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    runner = StreamingRunner(_agora(cluster), reqs, cfg, StreamConfig())
+    records = runner.run()
+    assert {r.name for r in records} == {"a", "b", "c"}
+    assert all(not r.failed for r in records)
+    s, f, d = runner.realized_intervals()
+    assert len(s) == 11                      # 5 + 3 + 3, each exactly once
+    assert capacity_violations(s, f, d, cluster.caps) == []
+    # at least one tenant actually rode multiple rounds (horizon cut it)
+    assert max(r.rounds for r in records) >= 2
+    for r in records:
+        assert r.finished >= r.submitted
+        assert r.cost > 0
