@@ -1,13 +1,15 @@
 """Diff two benchmark JSON runs and fail loudly on regression.
 
 Works on any benchmark artifact that follows the shared schema
-(``BENCH_multi_tenant.json``, ``BENCH_streaming.json``): CI archives every
-run's JSON, and this script compares the current run against the previous
-one, exiting non-zero when planner throughput regressed by more than
-``--max-regression`` (default 1.3x) on any common throughput key.  Quality
-(energy), the shared-mode energy delta, and the streaming deadline hit
-rates are reported as advisory context — they gate inside the benchmarks
-themselves.
+(``BENCH_multi_tenant.json``, ``BENCH_streaming.json``,
+``BENCH_solver.json``): CI archives every run's JSON, and this script
+compares the current run against the previous one, exiting non-zero when
+throughput regressed by more than ``--max-regression`` (default 1.3x) on
+any common throughput key (``dags_per_sec`` for the planner benchmarks,
+``steps_per_sec`` for the solver decode benchmark).  Quality (energy), the
+shared-mode energy delta, the streaming deadline hit rates, and interpret-
+mode fused-kernel numbers are reported as advisory context — they gate
+inside the benchmarks themselves.
 
   python benchmarks/compare_bench.py prev.json curr.json [--max-regression 1.3]
 """
@@ -36,13 +38,25 @@ def compare(prev: dict, curr: dict, max_regression: float) -> int:
         s = k.lstrip("P")
         return (0, int(s), k) if s.isdigit() else (1, 0, k)
 
+    def rate(entry: dict):
+        # planner artifacts report dags_per_sec, the solver decode
+        # benchmark steps_per_sec — one shared trend gate over both
+        for unit in ("dags_per_sec", "steps_per_sec"):
+            if unit in entry:
+                return entry[unit], unit.split("_")[0]
+        return None, None
+
     common = sorted(set(prev_tp) & set(curr_tp), key=order)
     if not common:
         print("no common throughput keys between runs; nothing to gate")
     for key in common:
-        p, c = prev_tp[key]["dags_per_sec"], curr_tp[key]["dags_per_sec"]
+        p, pu = rate(prev_tp[key])
+        c, cu = rate(curr_tp[key])
+        if p is None or c is None or pu != cu:
+            print(f"note: {key} has incompatible units between runs; skipped")
+            continue
         if c <= 0:
-            print(f"FAIL {key}: current throughput is {c} dags/s")
+            print(f"FAIL {key}: current throughput is {c} {cu}/s")
             status = 1
             continue
         ratio = p / c
@@ -50,7 +64,7 @@ def compare(prev: dict, curr: dict, max_regression: float) -> int:
         if ratio > max_regression:
             verdict = f"FAIL (> {max_regression:.2f}x regression)"
             status = 1
-        print(f"{key}: {p:.2f} -> {c:.2f} dags/s "
+        print(f"{key}: {p:.2f} -> {c:.2f} {cu}/s "
               f"(prev/curr = {ratio:.2f}x) {verdict}")
     p_sh, c_sh = prev.get("shared") or {}, curr.get("shared") or {}
     if p_sh and c_sh:
@@ -63,6 +77,13 @@ def compare(prev: dict, curr: dict, max_regression: float) -> int:
               f"{p_st.get('hit_sla'):.2f}/{p_st.get('hit_fifo'):.2f} -> "
               f"{c_st.get('hit_sla'):.2f}/{c_st.get('hit_fifo'):.2f} "
               f"(advisory; the sla > fifo gate runs inside the benchmark)")
+    p_fu, c_fu = prev.get("fused") or {}, curr.get("fused") or {}
+    for key in sorted(set(p_fu) & set(c_fu)):
+        print(f"fused decode {key}: speedup "
+              f"{p_fu[key].get('speedup'):.2f}x -> "
+              f"{c_fu[key].get('speedup'):.2f}x "
+              f"(advisory; parity + compiled >=1.5x gates run inside the "
+              f"benchmark)")
     return status
 
 

@@ -76,6 +76,17 @@ class Agora:
         self.vec_cfg = vec_cfg or VecConfig()
         self.mesh = mesh
 
+    def _chains_mesh(self):
+        """The mesh for SINGLE-problem solves: only a legacy 1-D chains
+        mesh applies there. A 2-axis (prob, chain) planner mesh shards the
+        batched ``plan_many`` paths and must not leak into
+        ``vectorized_anneal`` — its shard specs only name one axis, so a
+        planner mesh would replicate chains over the chain axis and
+        over-constrain the B %% devices assert."""
+        if self.mesh is not None and len(self.mesh.axis_names) == 1:
+            return self.mesh
+        return None
+
     def plan(self, dags: Sequence[DAG],
              ref: Optional[Tuple[float, float]] = None,
              goal: Optional[Goal] = None) -> Plan:
@@ -87,7 +98,8 @@ class Agora:
             sol = anneal(problem, self.cluster, goal, self.anneal_cfg, ref)
         elif self.solver == "vectorized":
             sol = vectorized_anneal(problem, self.cluster, goal,
-                                    self.vec_cfg, ref, mesh=self.mesh)
+                                    self.vec_cfg, ref,
+                                    mesh=self._chains_mesh())
         else:
             from repro.core.ising import ising_anneal
             sol = ising_anneal(problem, self.cluster, goal, ref=ref)
@@ -126,6 +138,13 @@ class Agora:
         the batched device solve's problem axis to a power-of-two bucket so
         a streaming arrival inside the bucket re-plans with zero re-tracing
         (padded slots are masked and bit-for-bit inert).
+
+        A 2-axis (problems x chains) ``mesh`` on the Agora (see
+        ``launch.mesh.make_planner_mesh``) shards the batched solve with
+        ``shard_map``: isolated mode shards problems x chains (so P scales
+        with devices), shared mode shards chains (the coupled decode is
+        joint over problems). A legacy 1-D chains mesh keeps the
+        per-problem fallback loop.
         """
         dags = list(dags)
         if not dags:
@@ -136,11 +155,14 @@ class Agora:
         refs = list(refs)
         goals = list(goals) if goals is not None else [self.goal] * len(dags)
         assert len(goals) == len(dags)
-        if self.solver != "vectorized" or self.mesh is not None:
-            # host-side solvers have no batched path; with a device mesh,
-            # plan() shards chains + replica-exchanges per problem — keep
-            # that behavior until the batched engine shards the problem
-            # axis too (ROADMAP: shard_map across problems)
+        planner_mesh = (self.mesh if self.mesh is not None
+                        and len(self.mesh.axis_names) == 2 else None)
+        if self.solver != "vectorized" or (self.mesh is not None
+                                           and planner_mesh is None):
+            # host-side solvers have no batched path; with a legacy 1-D
+            # chains mesh, plan() shards chains + replica-exchanges per
+            # problem — the batched engine only shards 2-axis planner
+            # meshes
             if shared_capacity:
                 return self._plan_shared_fallback(dags, problems, refs, goals)
             return [self.plan([d], ref=r, goal=g)
@@ -148,13 +170,13 @@ class Agora:
         if shared_capacity:
             sols, joint_errors = vectorized_anneal_shared(
                 problems, self.cluster, self.goal, self.vec_cfg, refs,
-                goals=goals, bucket_p=bucket_p)
+                goals=goals, bucket_p=bucket_p, mesh=planner_mesh)
             return [Plan(p, s, g, self.cluster, r,
                          joint_errors=joint_errors)
                     for p, s, r, g in zip(problems, sols, refs, goals)]
         sols = vectorized_anneal_many(problems, self.cluster, self.goal,
                                       self.vec_cfg, refs, goals=goals,
-                                      bucket_p=bucket_p)
+                                      bucket_p=bucket_p, mesh=planner_mesh)
         return [Plan(p, s, g, self.cluster, r)
                 for p, s, r, g in zip(problems, sols, refs, goals)]
 
@@ -244,7 +266,7 @@ class Agora:
             sol = anneal(prob, cluster, self.goal, self.anneal_cfg, ref)
         else:
             sol = vectorized_anneal(prob, cluster, self.goal, self.vec_cfg,
-                                    ref, mesh=self.mesh)
+                                    ref, mesh=self._chains_mesh())
         return Plan(prob, sol, self.goal, cluster, ref)
 
 

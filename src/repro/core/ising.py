@@ -42,14 +42,16 @@ class IsingConfig:
     lam_cap: float = 50.0
     lam_prec: float = 50.0
     use_pallas: bool = False        # True on TPU; interpret-validated on CPU
+    interpret: Optional[bool] = None  # tri-state: None = auto per backend
 
 
-@partial(jax.jit, static_argnames=("T", "iters", "use_pallas", "lam_cap",
-                                   "lam_prec"))
+@partial(jax.jit, static_argnames=("T", "iters", "use_pallas",
+                                   "interpret", "lam_cap", "lam_prec"))
 def _ising_scan(dur_bins, demands, costs, n_opts, pred_pairs, release, caps,
                 goal_w, ref_M, ref_C, opt0, start0, key, t0, cooling, *,
                 T: int, iters: int, use_pallas: bool,
-                lam_cap: float, lam_prec: float):
+                interpret: Optional[bool], lam_cap: float,
+                lam_prec: float):
     B, J = opt0.shape
 
     # demands provided as (J, O, M); gather to (B, M, J)
@@ -63,7 +65,8 @@ def _ising_scan(dur_bins, demands, costs, n_opts, pred_pairs, release, caps,
         d, dm, c = gather(opt)
         e, mk, viol, prec = kops.schedule_objective(
             start, d, dm, caps, c, pred_pairs, goal_w, ref_M, ref_C,
-            T=T, lam_cap=lam_cap, lam_prec=lam_prec, use_pallas=use_pallas)
+            T=T, lam_cap=lam_cap, lam_prec=lam_prec,
+            use_pallas=use_pallas, interpret=interpret)
         return e
 
     e0 = efun(opt0, start0)
@@ -154,7 +157,8 @@ def ising_anneal(problem: FlatProblem, cluster: Cluster, goal: Goal,
         jnp.asarray(cluster.caps, jnp.float32),
         goal.w, ref_M / dt, ref_C, opt0, start0, k3, cfg.t0, cfg.cooling,
         T=cfg.grid, iters=cfg.iters, use_pallas=cfg.use_pallas,
-        lam_cap=cfg.lam_cap, lam_prec=cfg.lam_prec)
+        interpret=cfg.interpret, lam_cap=cfg.lam_cap,
+        lam_prec=cfg.lam_prec)
 
     b = int(jnp.argmin(state["best_e"]))
     best_opt = np.asarray(state["best_opt"][b], np.int64)

@@ -42,6 +42,7 @@ from repro.core.dag import (FlatProblem, PackedProblems, SharedCapacityLayout,
 from repro.core.objectives import Goal, Solution
 from repro.core.sgs import (schedule_cost, sgs_schedule,
                             validate_schedule_many)
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +61,12 @@ class VecConfig:
     # capacity invariant); True accepts on the SUMMED per-tenant energy
     # delta — joint welfare — one verdict per chain applied to all tenants.
     joint_accept: bool = False
+    # grid-SGS decode backend (kernels/README.md dispatch matrix): None =
+    # auto per backend (fused Pallas kernel on TPU, lax reference on CPU/
+    # GPU). use_pallas=True, interpret=True forces the fused kernel through
+    # the Pallas interpreter — bit-identical, used by CPU CI for parity.
+    use_pallas: Optional[bool] = None
+    interpret: Optional[bool] = None
 
 
 # ---------------------------------------------------------------------------
@@ -107,52 +114,40 @@ class DeviceProblem:
 # ---------------------------------------------------------------------------
 
 
-def decode_schedule_full(dp: DeviceProblem, option_idx, priority):
-    """Grid-SGS decode with per-task outputs: option_idx (J,) int32,
-    priority (J,) f32 -> (start (J,), finish (J,), placed_ok (J,) bool).
-    Fixed trip count J; O(J*(T*M + J)). The capacity-window test only
-    considers resources the task actually demands, so one tenant's overload
-    can never block an unrelated tenant in a shared usage tensor."""
+def decode_schedule_batch(dp: DeviceProblem, option_idx, priority, *,
+                          use_pallas: Optional[bool] = None,
+                          interpret: Optional[bool] = None):
+    """Batched grid-SGS decode: option_idx (B, J) int32, priority (B, J)
+    f32 -> (start (B, J), finish (B, J), placed_ok (B, J) bool).
+
+    The per-task option gathers are hoisted here — outside the placement
+    loop — so the step itself is kernel-shaped (pre-gathered dur/dem plus
+    the shared release/pred/caps arrays) and dispatches through
+    ``kernels.ops.sgs_decode``: fused Pallas kernel on TPU (or forced via
+    ``use_pallas``/``interpret``), bit-identical ``lax`` reference
+    elsewhere. Fixed trip count J; O(J*(T*M + J)) per chain. The
+    capacity-window test only considers resources the task actually
+    demands, so one tenant's overload can never block an unrelated tenant
+    in a shared usage tensor."""
     J = dp.dur_bins.shape[0]
-    T = dp.T
-    tgrid = jnp.arange(T, dtype=jnp.int32)
-    dur = jnp.take_along_axis(dp.dur_bins, option_idx[:, None], 1)[:, 0]      # (J,)
-    dem = jnp.take_along_axis(
-        dp.demands, option_idx[:, None, None], 1)[:, 0]                        # (J, M)
+    jrow = jnp.arange(J)[None, :]
+    dur = dp.dur_bins[jrow, option_idx]                 # (B, J)
+    dem = dp.demands[jrow, option_idx]                  # (B, J, M)
+    return kops.sgs_decode(dur, dem, priority, dp.release_bins, dp.pred_mask,
+                           dp.caps, T=dp.T, use_pallas=use_pallas,
+                           interpret=interpret)
 
-    def step(carry, _):
-        usage, finish, scheduled = carry
-        eligible = (~scheduled) & jnp.all(
-            (~dp.pred_mask) | scheduled[None, :], axis=1)
-        score = jnp.where(eligible, priority, -jnp.inf)
-        j = jnp.argmax(score)
-        d = dur[j]
-        r = dem[j]
-        ready = jnp.maximum(
-            dp.release_bins[j],
-            jnp.max(jnp.where(dp.pred_mask[j], finish, 0)))
-        bad = jnp.any((usage + r[None, :] > dp.caps[None, :] + 1e-6)
-                      & (r[None, :] > 0), axis=1)                             # (T,)
-        cs = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                              jnp.cumsum(bad.astype(jnp.int32))])             # (T+1,)
-        win_bad = cs[jnp.minimum(tgrid + d, T)] - cs[tgrid]
-        ok = (win_bad == 0) & (tgrid >= ready) & (tgrid + d <= T)
-        any_ok = jnp.any(ok)
-        t_star = jnp.where(any_ok, jnp.argmax(ok), jnp.maximum(ready, T - d))
-        window = (tgrid >= t_star) & (tgrid < t_star + d)
-        usage = usage + window[:, None].astype(jnp.float32) * r[None, :]
-        finish = finish.at[j].set(t_star + d)
-        scheduled = scheduled.at[j].set(True)
-        return (usage, finish, scheduled), (j, t_star, any_ok)
 
-    M = dp.caps.shape[0]
-    init = (jnp.zeros((T, M), jnp.float32), jnp.zeros(J, jnp.int32),
-            jnp.zeros(J, bool))
-    (usage, finish, _), (order, starts, oks) = jax.lax.scan(
-        step, init, None, length=J)
-    start = jnp.zeros(J, jnp.int32).at[order].set(starts)
-    placed_ok = jnp.zeros(J, bool).at[order].set(oks)
-    return start, finish, placed_ok
+def decode_schedule_full(dp: DeviceProblem, option_idx, priority, *,
+                         use_pallas: Optional[bool] = None,
+                         interpret: Optional[bool] = None):
+    """Single-candidate grid-SGS decode (the B=1 case of
+    ``decode_schedule_batch``): option_idx (J,) int32, priority (J,) f32
+    -> (start (J,), finish (J,), placed_ok (J,) bool)."""
+    start, finish, ok = decode_schedule_batch(
+        dp, option_idx[None, :], priority[None, :],
+        use_pallas=use_pallas, interpret=interpret)
+    return start[0], finish[0], ok[0]
 
 
 def decode_schedule(dp: DeviceProblem, option_idx, priority):
@@ -174,8 +169,16 @@ def _deadline_term(mk, dl, dl_w):
 
 
 def chain_energy(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
-                 option_idx, priority):
-    _, mk, cost, infeas = decode_schedule(dp, option_idx, priority)
+                 option_idx, priority, *, use_pallas=None, interpret=None):
+    """Batched chain energies: option_idx/priority (B, J) -> per-chain
+    (energy, makespan, cost), each (B,), from ONE batched decode."""
+    _, finish, ok = decode_schedule_batch(dp, option_idx, priority,
+                                          use_pallas=use_pallas,
+                                          interpret=interpret)
+    J = dp.costs.shape[0]
+    cost = dp.costs[jnp.arange(J)[None, :], option_idx].sum(axis=1)     # (B,)
+    mk = jnp.max(finish, axis=1).astype(jnp.float32) * dp.dt
+    infeas = jnp.sum(~ok, axis=1)
     e = (goal_w * (mk - ref_M) / ref_M
          + (1.0 - goal_w) * (cost - ref_C) / ref_C)
     e = e + _deadline_term(mk, dl, dl_w)
@@ -185,6 +188,34 @@ def chain_energy(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
 # ---------------------------------------------------------------------------
 # Batched SA
 # ---------------------------------------------------------------------------
+
+
+def _migrate_chains(opt, prio, e, best_opt, best_prio, best_e, axis_name):
+    """Replica exchange over a (B, J) chain batch: the globally best chain
+    (argmin of per-chain incumbents) replaces the single globally worst
+    live chain. With ``axis_name`` the chain axis is sharded over devices;
+    the collective form reproduces the single-device semantics EXACTLY —
+    device order equals chain order and ties resolve to the first index on
+    both sides — so a problem-sharded mesh solve stays bit-identical to
+    the unsharded one."""
+    src = jnp.argmin(best_e)
+    b_opt, b_prio, b_e = best_opt[src], best_prio[src], best_e[src]
+    if axis_name is None:
+        dst = jnp.argmax(e)
+        return (opt.at[dst].set(b_opt), prio.at[dst].set(b_prio),
+                e.at[dst].set(b_e))
+    all_e = jax.lax.all_gather(b_e, axis_name)
+    all_o = jax.lax.all_gather(b_opt, axis_name)
+    all_p = jax.lax.all_gather(b_prio, axis_name)
+    g = jnp.argmin(all_e)
+    b_opt, b_prio, b_e = all_o[g], all_p[g], all_e[g]
+    loc_dst = jnp.argmax(e)
+    owner = jnp.argmax(jax.lax.all_gather(e[loc_dst], axis_name))
+    mine = owner == jax.lax.axis_index(axis_name)
+    oh = (jnp.arange(e.shape[0]) == loc_dst) & mine
+    return (jnp.where(oh[:, None], b_opt[None, :], opt),
+            jnp.where(oh[:, None], b_prio[None, :], prio),
+            jnp.where(oh, b_e, e))
 
 
 def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
@@ -200,8 +231,8 @@ def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
     if j_max is None:
         j_max = J
     j_max = jnp.maximum(j_max, 1)
-    energy_fn = jax.vmap(partial(chain_energy, dp, goal_w, ref_M, ref_C,
-                                 dl, dl_w))
+    energy_fn = partial(chain_energy, dp, goal_w, ref_M, ref_C, dl, dl_w,
+                        use_pallas=cfg.use_pallas, interpret=cfg.interpret)
 
     e0, mk0, c0 = energy_fn(opt0, prio0)
     state0 = dict(opt=opt0, prio=prio0, e=e0,
@@ -233,21 +264,13 @@ def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
         best_prio = jnp.where(better[:, None], prio, state["best_prio"])
         best_e = jnp.where(better, e, state["best_e"])
 
-        # replica exchange: every migrate_every iters, the globally best chain
-        # replaces each batch's worst chain (and across devices if axis_name).
+        # replica exchange: every migrate_every iters, the globally best
+        # chain replaces the globally worst one (exact across devices).
         def migrate(args):
             opt, prio, e, best_opt, best_prio, best_e = args
-            src = jnp.argmin(best_e)
-            b_opt, b_prio, b_e = best_opt[src], best_prio[src], best_e[src]
-            if axis_name is not None:
-                all_e = jax.lax.all_gather(b_e, axis_name)
-                all_o = jax.lax.all_gather(b_opt, axis_name)
-                all_p = jax.lax.all_gather(b_prio, axis_name)
-                g = jnp.argmin(all_e)
-                b_opt, b_prio, b_e = all_o[g], all_p[g], all_e[g]
-            dst = jnp.argmax(e)
-            return (opt.at[dst].set(b_opt), prio.at[dst].set(b_prio),
-                    e.at[dst].set(b_e), best_opt, best_prio, best_e)
+            opt, prio, e = _migrate_chains(opt, prio, e, best_opt, best_prio,
+                                           best_e, axis_name)
+            return opt, prio, e, best_opt, best_prio, best_e
 
         do_mig = (it % cfg.migrate_every) == (cfg.migrate_every - 1)
         opt, prio, e, best_opt, best_prio, best_e = jax.lax.cond(
@@ -333,6 +356,60 @@ def _run_sa_many_jit(per_problem, caps, goal_w, ref_M, ref_C, dl, dl_w,
                          opt0, prio0, keys)
 
 
+@partial(jax.jit, static_argnames=("cfg", "T", "mesh"))
+def _run_sa_many_sharded_jit(per_problem, caps, goal_w, ref_M, ref_C, dl,
+                             dl_w, cfg, T, opt0, prio0, keys, mesh):
+    """``_run_sa_many_jit`` under ``shard_map`` on a 2-D (problems x
+    chains) device mesh: the problem axis of every per-problem leaf (and
+    axis 0 of the (P, B, J) chain states) shards over the first mesh axis,
+    the chain axis over the second — P scales with devices, not cores.
+
+    With chain-axis size 1 the solve is BIT-IDENTICAL to the single-device
+    ``_run_sa_many_jit`` (per-problem RNG streams are untouched and the
+    migration collective degenerates to the local argmin/argmax). With >1
+    chain shards, each device folds its axis index into the per-problem
+    key — otherwise every device would propose the same mutations — so
+    results are deliberately different from (and better-mixed than) the
+    replicated-key layout; replica exchange still picks the one global
+    best/worst pair exactly.
+
+    ``mesh`` rides in the static JIT signature, so re-planning inside a
+    P bucket reuses the live cache entry (same zero-retrace contract as
+    the unsharded path)."""
+    from repro.compat import shard_map
+    ap, ac = mesh.axis_names
+    chain_devs = mesh.shape[ac]
+
+    def shard_fn(per_problem, goal_w, ref_M, ref_C, dl, dl_w,
+                 opt0, prio0, keys, caps):
+        def one(slices, gw, rM, rC, dlp, dlwp, o0, p0, key):
+            (dur_bins, demands, costs, n_opts, pred_mask, release_bins, dt,
+             n_real) = slices
+            dpl = DeviceProblem(dur_bins, demands, costs, n_opts, pred_mask,
+                                release_bins, caps, dt, T)
+            if chain_devs > 1:
+                key = jax.random.fold_in(key, jax.lax.axis_index(ac))
+            return _sa_scan(dpl, gw, rM, rC, dlp, dlwp, cfg, o0, p0, key,
+                            axis_name=ac if chain_devs > 1 else None,
+                            j_max=n_real)
+
+        return jax.vmap(one)(per_problem, goal_w, ref_M, ref_C, dl, dl_w,
+                             opt0, prio0, keys)
+
+    pbj = P(ap, ac)
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=((P(ap),) * len(per_problem), P(ap), P(ap), P(ap), P(ap),
+                  P(ap), pbj, pbj, P(ap), P()),
+        out_specs=dict(opt=pbj, prio=pbj, e=P(ap, ac), best_opt=pbj,
+                       best_prio=pbj, best_e=P(ap, ac),
+                       # the vmap over problems makes the cooled
+                       # temperature per-problem (P,), sharded like them
+                       T=P(ap)))
+    return fn(per_problem, goal_w, ref_M, ref_C, dl, dl_w, opt0, prio0,
+              keys, caps)
+
+
 # priority assigned to masked padding slots: finite (so they stay below any
 # real task and above the -inf "ineligible" sentinel) but far outside the
 # reachable range of real priorities.
@@ -407,7 +484,7 @@ def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
                            goal: Goal, cfg: Optional[VecConfig] = None,
                            refs: Optional[Sequence[Tuple[float, float]]] = None,
                            goals: Optional[Sequence[Goal]] = None,
-                           bucket_p=None) -> List[Solution]:
+                           bucket_p=None, mesh=None) -> List[Solution]:
     """Anneal P independent problems in one batched device solve.
 
     Returns one ``Solution`` per problem, each re-evaluated event-exactly on
@@ -416,6 +493,12 @@ def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
     gives each tenant its own objective (SLA classes: per-tenant w plus a
     deadline hinge term); ``bucket_p`` pads the problem axis to a power-of-
     two bucket so streaming arrivals re-plan without re-tracing.
+
+    ``mesh`` (a 2-axis problems x chains device mesh, e.g.
+    ``launch.mesh.make_planner_mesh()``) shards the solve with
+    ``shard_map``: the problem axis over the first mesh axis, chains over
+    the second. The problem axis is auto-bucketed to cover the mesh, and a
+    chains axis of size 1 is bit-identical to the single-device solve.
     """
     cfg = cfg or VecConfig()
     problems = list(problems)
@@ -430,8 +513,19 @@ def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
     ref_M = np.asarray([r[0] for r in refs])
     ref_C = np.asarray([r[1] for r in refs])
 
+    if mesh is not None:
+        ap, ac = mesh.axis_names
+        # bucket the problem axis up to the mesh: power-of-two device
+        # counts always divide the power-of-two bucket, and padded slots
+        # are provably inert, so meshing never changes the plans
+        bucket_p = max(int(bucket_p or 1), mesh.shape[ap])
     packed = pack_problems(problems, cluster.num_resources, bucket_p=bucket_p)
     P_pad = packed.padded_problems
+    if mesh is not None:
+        assert P_pad % mesh.shape[ap] == 0, \
+            f"problem bucket {P_pad} not divisible by mesh axis " \
+            f"{ap}={mesh.shape[ap]}"
+        assert cfg.chains % mesh.shape[ac] == 0, (cfg.chains, mesh.shape[ac])
     ref_Mp, ref_Cp = _pad_refs(ref_M, ref_C, P_pad)
     goal_w, dl, dl_w = _goal_arrays(goals, P_pad)
     bdp = BatchedDeviceProblem.build(packed, cluster, ref_Mp, cfg)
@@ -440,10 +534,12 @@ def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
 
     per_problem = (bdp.dur_bins, bdp.demands, bdp.costs, bdp.n_opts,
                    bdp.pred_mask, bdp.release_bins, bdp.dt, bdp.n_real)
-    state = _run_sa_many_jit(per_problem, bdp.caps, goal_w,
-                             jnp.asarray(ref_Mp, jnp.float32),
-                             jnp.asarray(ref_Cp, jnp.float32),
-                             dl, dl_w, cfg, bdp.T, opt0, prio0, pkeys)
+    run = (_run_sa_many_jit if mesh is None
+           else partial(_run_sa_many_sharded_jit, mesh=mesh))
+    state = run(per_problem, bdp.caps, goal_w,
+                jnp.asarray(ref_Mp, jnp.float32),
+                jnp.asarray(ref_Cp, jnp.float32),
+                dl, dl_w, cfg, bdp.T, opt0, prio0, pkeys)
 
     best_idx = np.asarray(jnp.argmin(state["best_e"], axis=1))     # (P,)
     best_opt = np.asarray(state["best_opt"])                        # (P, B, J)
@@ -515,31 +611,38 @@ class SharedDeviceProblem:
 
 
 def shared_chain_energy(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
-                        dl, dl_w, option_idx, priority):
-    """option_idx/priority (P, J) -> per-tenant (energy, makespan, cost),
-    each (P,), from ONE joint decode against the shared usage tensor. Where
-    ``chain_energy`` prices P independent capacity frontiers, this couples
-    them: a tenant's feasible windows shrink by exactly the capacity its
-    competitors' current configurations consume.  ``goal_w``/``dl``/``dl_w``
-    are per-tenant (P,) weights, so a guaranteed-class tenant's deadline
-    hinge pushes its energy — and through the accept dynamics, the whole
-    batch — toward configurations that protect its SLA."""
-    P_n, J = option_idx.shape
-    flat_o = option_idx.reshape(-1)
-    flat_p = priority.reshape(-1)
-    _, finish, ok = decode_schedule_full(sdp.dp, flat_o, flat_p)
-    mk = jnp.max(finish.reshape(P_n, J), axis=1).astype(jnp.float32) * sdp.dp.dt
-    cost = jnp.take_along_axis(sdp.dp.costs, flat_o[:, None], 1)[:, 0] \
-        .reshape(P_n, J).sum(axis=1)
-    infeas = jnp.sum(~ok.reshape(P_n, J), axis=1)
-    e = (goal_w * (mk - ref_M) / ref_M
-         + (1.0 - goal_w) * (cost - ref_C) / ref_C)
-    e = e + _deadline_term(mk, dl, dl_w)
+                        dl, dl_w, option_idx, priority, *,
+                        use_pallas=None, interpret=None):
+    """option_idx/priority (P, B, J) -> per-tenant (energy, makespan,
+    cost), each (P, B), every chain priced by ONE joint decode of all
+    P*Jmax slots against the shared usage tensor. Where ``chain_energy``
+    prices P independent capacity frontiers, this couples them: a tenant's
+    feasible windows shrink by exactly the capacity its competitors'
+    current configurations consume.  ``goal_w``/``dl``/``dl_w`` are per-
+    tenant (P,) weights, so a guaranteed-class tenant's deadline hinge
+    pushes its energy — and through the accept dynamics, the whole batch —
+    toward configurations that protect its SLA."""
+    P_n, B, J = option_idx.shape
+    flat_o = option_idx.transpose(1, 0, 2).reshape(B, P_n * J)
+    flat_p = priority.transpose(1, 0, 2).reshape(B, P_n * J)
+    _, finish, ok = decode_schedule_batch(sdp.dp, flat_o, flat_p,
+                                          use_pallas=use_pallas,
+                                          interpret=interpret)
+    mk = jnp.max(finish.reshape(B, P_n, J), axis=2).T.astype(jnp.float32) \
+        * sdp.dp.dt                                                  # (P, B)
+    Jtot = sdp.dp.costs.shape[0]
+    cost = sdp.dp.costs[jnp.arange(Jtot)[None, :], flat_o] \
+        .reshape(B, P_n, J).sum(axis=2).T                            # (P, B)
+    infeas = jnp.sum(~ok.reshape(B, P_n, J), axis=2).T
+    e = (goal_w[:, None] * (mk - ref_M[:, None]) / ref_M[:, None]
+         + (1.0 - goal_w[:, None]) * (cost - ref_C[:, None]) / ref_C[:, None])
+    e = e + _deadline_term(mk, dl[:, None], dl_w[:, None])
     return e + 100.0 * infeas.astype(jnp.float32), mk, cost
 
 
 def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
-                    dl, dl_w, cfg: VecConfig, opt0, prio0, pkeys):
+                    dl, dl_w, cfg: VecConfig, opt0, prio0, pkeys,
+                    axis_name: Optional[str] = None):
     """Coupled-batch SA: the P tenants keep their own chains, moves, and
     accept decisions (identical key streams to the isolated ``_sa_scan``
     under vmap — the disjoint-capacity degenerate case reproduces isolated
@@ -552,12 +655,17 @@ def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
     are replaced by ONE verdict per chain on the summed energy delta (joint
     welfare): a move that hurts one tenant but helps the batch more can now
     be kept.  This breaks the bit-for-bit disjoint-capacity degeneracy, so
-    it stays behind the flag."""
+    it stays behind the flag.
+
+    ``axis_name`` shards the CHAIN axis over devices (the problem axis is
+    inherently joint here — every chain decodes all P problems — so it
+    cannot shard); per-tenant replica exchange then runs the exact global
+    best/worst collective."""
     P_n, B, J = opt0.shape
     n_opts_pj = sdp.dp.n_opts.reshape(P_n, J)
-    energy_all = jax.vmap(
-        partial(shared_chain_energy, sdp, goal_w, ref_M, ref_C, dl, dl_w),
-        in_axes=(1, 1), out_axes=1)                   # (P, B, J) -> (P, B)
+    energy_all = partial(shared_chain_energy, sdp, goal_w, ref_M, ref_C,
+                         dl, dl_w, use_pallas=cfg.use_pallas,
+                         interpret=cfg.interpret)     # (P, B, J) -> (P, B)
 
     e0, _, _ = energy_all(opt0, prio0)
     state0 = dict(opt=opt0, prio=prio0, e=e0,
@@ -624,16 +732,9 @@ def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
 
         def migrate(args):
             opt, prio, e, best_opt, best_prio, best_e = args
-
-            def mig_one(opt, prio, e, b_opt, b_prio, b_e):
-                src = jnp.argmin(b_e)
-                dst = jnp.argmax(e)
-                return (opt.at[dst].set(b_opt[src]),
-                        prio.at[dst].set(b_prio[src]),
-                        e.at[dst].set(b_e[src]))
-
-            opt, prio, e = jax.vmap(mig_one)(opt, prio, e,
-                                             best_opt, best_prio, best_e)
+            opt, prio, e = jax.vmap(
+                partial(_migrate_chains, axis_name=axis_name))(
+                opt, prio, e, best_opt, best_prio, best_e)
             return opt, prio, e, best_opt, best_prio, best_e
 
         do_mig = (it % cfg.migrate_every) == (cfg.migrate_every - 1)
@@ -665,11 +766,52 @@ def _run_sa_shared_jit(dp_arrays, dp_static, n_real, goal_w, ref_M, ref_C,
                            opt0, prio0, pkeys)
 
 
+@partial(jax.jit, static_argnames=("cfg", "dp_static", "mesh"))
+def _run_sa_shared_sharded_jit(dp_arrays, dp_static, n_real, goal_w, ref_M,
+                               ref_C, dl, dl_w, cfg, opt0, prio0, pkeys,
+                               mesh):
+    """``_run_sa_shared_jit`` under ``shard_map``. The shared decode is
+    inherently joint over the problem axis (every chain prices ALL P
+    tenants through one usage tensor), so only the CHAIN axis shards —
+    over the second axis of the same (problems x chains) planner mesh the
+    isolated path uses; the first axis stays replicated here. Chain-axis
+    size 1 is bit-identical to the single-device coupled solve; with >1
+    shards each device folds its axis index into every per-tenant key
+    (mirroring the isolated sharded path)."""
+    from repro.compat import shard_map
+    ap, ac = mesh.axis_names
+    chain_devs = mesh.shape[ac]
+
+    def shard_fn(dp_arrays, n_real, goal_w, ref_M, ref_C, dl, dl_w,
+                 opt0, prio0, pkeys):
+        P_n, _, J = opt0.shape
+        dp = DeviceProblem(*dp_arrays, *dp_static)
+        sdp = SharedDeviceProblem(dp, P_n, J, n_real)
+        if chain_devs > 1:
+            pkeys = jax.vmap(lambda k: jax.random.fold_in(
+                k, jax.lax.axis_index(ac)))(pkeys)
+        return _sa_scan_shared(sdp, goal_w, ref_M, ref_C, dl, dl_w, cfg,
+                               opt0, prio0, pkeys,
+                               axis_name=ac if chain_devs > 1 else None)
+
+    pbj = P(None, ac)
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=((P(),) * len(dp_arrays), P(), P(), P(), P(), P(), P(),
+                  pbj, pbj, P()),
+        out_specs=dict(opt=pbj, prio=pbj, e=P(None, ac), best_opt=pbj,
+                       best_prio=pbj, best_e=P(None, ac), jbest_opt=pbj,
+                       jbest_prio=pbj, jbest_sum=P(ac), T=P()))
+    return fn(dp_arrays, n_real, goal_w, ref_M, ref_C, dl, dl_w,
+              opt0, prio0, pkeys)
+
+
 def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
                              goal: Goal, cfg: Optional[VecConfig] = None,
                              refs: Optional[Sequence[Tuple[float, float]]] = None,
                              goals: Optional[Sequence[Goal]] = None,
-                             bucket_p=None) -> Tuple[List[Solution], List[str]]:
+                             bucket_p=None, mesh=None
+                             ) -> Tuple[List[Solution], List[str]]:
     """Anneal P tenant problems against ONE shared cluster capacity.
 
     The coupled counterpart of ``vectorized_anneal_many``: instead of P
@@ -688,6 +830,9 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
     ``bucket_p`` pads the problem axis to a power-of-two bucket (padded
     slots fully masked and provably inert in the joint decode) so a
     streaming arrival inside the bucket reuses the live JIT cache entry.
+    ``mesh`` (the 2-axis planner mesh) shards the CHAIN axis over its
+    second axis — the coupled decode is joint over problems, so the first
+    axis stays replicated here (see ``_run_sa_shared_sharded_jit``).
     """
     cfg = cfg or VecConfig()
     problems = list(problems)
@@ -717,12 +862,17 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
 
     opt0, prio0, pkeys = _init_chains(packed, cfg)
 
+    if mesh is not None:
+        ac = mesh.axis_names[1]
+        assert cfg.chains % mesh.shape[ac] == 0, (cfg.chains, mesh.shape[ac])
     dp_arrays = (sdp.dp.dur_bins, sdp.dp.demands, sdp.dp.costs, sdp.dp.n_opts,
                  sdp.dp.pred_mask, sdp.dp.release_bins, sdp.dp.caps,
                  jnp.float32(sdp.dp.dt))
-    state = _run_sa_shared_jit(dp_arrays, (sdp.dp.T,), sdp.n_real,
-                               goal_w, ref_Mj, ref_Cj, dl, dl_w,
-                               cfg, opt0, prio0, pkeys)
+    run = (_run_sa_shared_jit if mesh is None
+           else partial(_run_sa_shared_sharded_jit, mesh=mesh))
+    state = run(dp_arrays, (sdp.dp.T,), sdp.n_real,
+                goal_w, ref_Mj, ref_Cj, dl, dl_w,
+                cfg, opt0, prio0, pkeys)
 
     best_idx = np.asarray(jnp.argmin(state["best_e"], axis=1))      # (P',)
     best_opt = np.asarray(state["best_opt"])                        # (P', B, J)
@@ -745,10 +895,12 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
     b_star = int(np.asarray(jnp.argmin(state["jbest_sum"])))
     opt_coh = state["jbest_opt"][:, b_star]
     prio_coh = state["jbest_prio"][:, b_star]
-    e2, _, _ = jax.vmap(
-        partial(shared_chain_energy, sdp, goal_w, ref_Mj, ref_Cj, dl, dl_w))(
-        jnp.stack([opt_self, opt_coh]), jnp.stack([prio_self, prio_coh]))
-    sums = np.asarray(e2.sum(axis=1))                               # (2,)
+    e2, _, _ = shared_chain_energy(
+        sdp, goal_w, ref_Mj, ref_Cj, dl, dl_w,
+        jnp.stack([opt_self, opt_coh], axis=1),         # (P', 2, J)
+        jnp.stack([prio_self, prio_coh], axis=1),
+        use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+    sums = np.asarray(e2.sum(axis=0))                               # (2,)
     if sums[1] < sums[0]:
         opt_pick, prio_pick = np.asarray(opt_coh), np.asarray(prio_coh)
     else:

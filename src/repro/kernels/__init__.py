@@ -1,5 +1,7 @@
-"""Pallas TPU kernels for the AGORA solver hot spots (see DESIGN.md §3).
+"""Pallas TPU kernels for the AGORA solver hot spots (see DESIGN.md §3 and
+the dispatch/fallback matrix in kernels/README.md).
 
+sgs_decode:   fused grid-SGS decode (the SA inner loop; bit-exact vs ref)
 sched_energy: batched schedule capacity-violation (mask-matmul on the MXU)
 usl_runtime:  batched USL (paper Eq. 9) runtime prediction
 ops:          jit wrappers; ref: pure-jnp oracles backing the tests

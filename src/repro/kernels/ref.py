@@ -1,8 +1,10 @@
 """Pure-jnp oracles for the solver kernels. These define the semantics the
-Pallas kernels must reproduce (asserted across shape/dtype sweeps in tests).
+Pallas kernels must reproduce (asserted across shape/dtype sweeps in tests;
+``sgs_decode_ref`` is held to BIT-FOR-BIT equality, not tolerance).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -25,6 +27,70 @@ def sched_violation_ref(start, dur, dem, caps, T: int):
     usage = jnp.einsum("bmj,bjt->bmt", dem.astype(jnp.float32), mask)
     over = jnp.maximum(usage - caps.astype(jnp.float32)[None, :, None], 0.0)
     return over.sum(axis=(1, 2))
+
+
+def sgs_decode_ref(dur, dem, prio, release, pred, caps, *, T: int):
+    """Batched grid-SGS decode — the serial-SGS placement loop of the
+    AGORA solver on a quantized time grid, with per-task option gathers
+    already hoisted (dur/dem are pre-gathered per candidate).
+
+    dur:     (B, J) int32 durations in grid bins (0 = masked no-op slot)
+    dem:     (B, J, M) f32 per-task resource demands at the chosen option
+    prio:    (B, J) f32 SGS priorities
+    release: (J,) int32 release bins (shared across the batch)
+    pred:    (J, J) bool; [j, p] = p is a predecessor of j
+    caps:    (M,) f32 capacities
+    T:       grid length (static)
+
+    Returns (start (B, J) int32, finish (B, J) int32, ok (B, J) bool).
+    Per step the highest-priority eligible task is placed at its earliest
+    capacity-feasible start (cumsum window test over the (T, M) usage
+    tensor, demand-masked so zero-demand resources never block). This is
+    the reference the fused Pallas kernel (kernels/sgs_decode.py) must
+    reproduce bit-for-bit.
+    """
+    J = release.shape[0]
+    tgrid = jnp.arange(T, dtype=jnp.int32)
+    release = release.astype(jnp.int32)
+    caps = caps.astype(jnp.float32)
+    M = caps.shape[0]
+
+    def one(dur1, dem1, prio1):
+        def step(carry, _):
+            usage, finish, scheduled = carry
+            eligible = (~scheduled) & jnp.all(
+                (~pred) | scheduled[None, :], axis=1)
+            score = jnp.where(eligible, prio1, -jnp.inf)
+            j = jnp.argmax(score)
+            d = dur1[j]
+            r = dem1[j]
+            ready = jnp.maximum(
+                release[j], jnp.max(jnp.where(pred[j], finish, 0)))
+            bad = jnp.any((usage + r[None, :] > caps[None, :] + 1e-6)
+                          & (r[None, :] > 0), axis=1)                  # (T,)
+            cs = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                  jnp.cumsum(bad.astype(jnp.int32))])  # (T+1,)
+            win_bad = cs[jnp.minimum(tgrid + d, T)] - cs[tgrid]
+            ok = (win_bad == 0) & (tgrid >= ready) & (tgrid + d <= T)
+            any_ok = jnp.any(ok)
+            t_star = jnp.where(any_ok, jnp.argmax(ok),
+                               jnp.maximum(ready, T - d))
+            window = (tgrid >= t_star) & (tgrid < t_star + d)
+            usage = usage + window[:, None].astype(jnp.float32) * r[None, :]
+            finish = finish.at[j].set(t_star + d)
+            scheduled = scheduled.at[j].set(True)
+            return (usage, finish, scheduled), (j, t_star, any_ok)
+
+        init = (jnp.zeros((T, M), jnp.float32), jnp.zeros(J, jnp.int32),
+                jnp.zeros(J, bool))
+        (_, finish, _), (order, starts, oks) = jax.lax.scan(
+            step, init, None, length=J)
+        start = jnp.zeros(J, jnp.int32).at[order].set(starts)
+        placed_ok = jnp.zeros(J, bool).at[order].set(oks)
+        return start, finish, placed_ok
+
+    return jax.vmap(one)(dur.astype(jnp.int32), dem.astype(jnp.float32),
+                         prio.astype(jnp.float32))
 
 
 def usl_runtime_ref(n, alpha, beta, gamma, work):

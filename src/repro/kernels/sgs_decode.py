@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: fused grid-SGS decode — the solver's hottest loop.
+
+Every SA iteration re-runs the serial-SGS placement loop for each of B
+chains (and, in shared-capacity mode, over P*Jmax flattened slots). The
+``lax`` reference (kernels/ref.sgs_decode_ref) materializes the (T, M)
+usage tensor through HBM once per scan step; this kernel fuses the whole
+J-step loop — the demand-masked overload test, the window feasibility
+scan, the earliest-feasible-start argmax, and the usage-tensor window
+scatter — into ONE kernel invocation per chain, keeping usage resident
+in VMEM for the full placement loop.
+
+Two kernel-shaping choices:
+
+* usage is held transposed, (M, T): resources on sublanes, time bins on
+  lanes (T is a multiple of 128 after padding), so the per-bin overload
+  test is a lane-wise VPU op;
+* the O(T) cumsum window test is re-expressed as a (T, T) mask-matmul
+  against the overload indicator (``win_bad = W @ bad`` with
+  ``W[t, s] = 1[t <= s < t+d]``), the same trick kernels/sched_energy.py
+  uses — integer counts are exact in f32, so feasibility verdicts are
+  bit-identical to the integer cumsum.
+
+All comparisons and the usage accumulation happen in the same dtype and
+order as the reference, so outputs are BIT-IDENTICAL, not merely close
+(asserted in tests/test_sgs_decode.py). Scalar extraction uses one-hot
+masked reductions instead of dynamic gathers (Mosaic-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_T = 128
+
+
+def _kernel(dur_ref, demT_ref, prio_ref, rel_ref, pred_ref, caps_ref,
+            start_ref, finish_ref, ok_ref, *, T: int, Tp: int, J: int):
+    Jp = dur_ref.shape[1]
+    dur = dur_ref[0, :]                                # (Jp,) i32
+    demT = demT_ref[0]                                 # (M, Jp) f32
+    prio = prio_ref[0, :]                              # (Jp,) f32
+    rel = rel_ref[0, :]                                # (Jp,) i32
+    pred = pred_ref[...] > 0.0                         # (Jp, Jp) bool
+    caps = caps_ref[0, :]                              # (M,) f32
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (Jp, 1), 0)[:, 0]   # (Jp,)
+    tcol = jax.lax.broadcasted_iota(jnp.int32, (Tp, 1), 0)         # (Tp, 1)
+    tlane = jax.lax.broadcasted_iota(jnp.int32, (1, Tp), 1)        # (1, Tp)
+    tr = tcol[:, 0]                                                # (Tp,)
+
+    M = demT.shape[0]
+    init = (jnp.zeros((M, Tp), jnp.float32),           # usage (transposed)
+            jnp.zeros((Jp,), jnp.int32),               # finish
+            jidx >= J,                                 # scheduled (padding on)
+            jnp.zeros((Jp,), jnp.int32),               # start
+            jnp.zeros((Jp,), jnp.bool_))               # placed_ok
+
+    def body(_, carry):
+        usage, finish, sched, start, okk = carry
+        eligible = (~sched) & jnp.all((~pred) | sched[None, :], axis=1)
+        score = jnp.where(eligible, prio, -jnp.inf)
+        j = jnp.argmax(score)
+        oh = jidx == j                                 # one-hot over slots
+        d = jnp.sum(jnp.where(oh, dur, 0))
+        r = jnp.sum(demT * oh.astype(jnp.float32)[None, :], axis=1)  # (M,)
+        predrow = jnp.any(pred & oh[:, None], axis=0)  # row j of pred
+        ready = jnp.maximum(jnp.sum(jnp.where(oh, rel, 0)),
+                            jnp.max(jnp.where(predrow, finish, 0)))
+        bad = jnp.any((usage + r[:, None] > caps[:, None] + 1e-6)
+                      & (r[:, None] > 0), axis=0)      # (Tp,)
+        # window overload count on the MXU: win_bad[t] = sum_{t<=s<t+d} bad[s]
+        W = ((tlane >= tcol) & (tlane < tcol + d)).astype(jnp.float32)
+        win_bad = jax.lax.dot_general(
+            W, bad.astype(jnp.float32)[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]  # (Tp,)
+        # tr < T restricts candidates to the reference's [0, T) grid — for
+        # d > 0 it is implied by t + d <= T, but a zero-duration (masked)
+        # slot could otherwise land on the padded bin t == T
+        ok_t = (win_bad == 0.0) & (tr >= ready) & (tr + d <= T) & (tr < T)
+        any_ok = jnp.any(ok_t)
+        t_star = jnp.where(any_ok, jnp.argmax(ok_t).astype(jnp.int32),
+                           jnp.maximum(ready, T - d))
+        window = ((tr >= t_star) & (tr < t_star + d)).astype(jnp.float32)
+        usage = usage + window[None, :] * r[:, None]
+        finish = jnp.where(oh, t_star + d, finish)
+        sched = sched | oh
+        start = jnp.where(oh, t_star, start)
+        okk = jnp.where(oh, any_ok, okk)
+        return usage, finish, sched, start, okk
+
+    _, finish, _, start, okk = jax.lax.fori_loop(0, J, body, init)
+    start_ref[0, :] = start
+    finish_ref[0, :] = finish
+    ok_ref[0, :] = okk.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "interpret"))
+def sgs_decode(dur, dem, prio, release, pred, caps, *, T: int,
+               interpret: bool = False):
+    """Fused batched grid-SGS decode. Same contract as
+    kernels/ref.sgs_decode_ref: dur (B, J) i32, dem (B, J, M) f32,
+    prio (B, J) f32, release (J,) i32, pred (J, J) bool, caps (M,) f32
+    -> (start, finish (B, J) i32, ok (B, J) bool).
+
+    Pads J to a sublane multiple (padded slots are born "scheduled" and
+    carry zero demand, so they can never be selected or shift a real
+    placement) and T to a TILE_T lane multiple (bins beyond T only ever
+    receive usage from truncation-free fallback placements, and no
+    feasibility window that matters — every accepted window satisfies
+    ``t + d <= T`` — can read them).
+    """
+    B, J = dur.shape
+    M = dem.shape[2]
+    Jp = max(8, -(-J // 8) * 8)
+    Tp = -(-T // TILE_T) * TILE_T
+    durp = jnp.pad(dur.astype(jnp.int32), ((0, 0), (0, Jp - J)))
+    demT = jnp.pad(dem.astype(jnp.float32),
+                   ((0, 0), (0, Jp - J), (0, 0))).transpose(0, 2, 1)
+    priop = jnp.pad(prio.astype(jnp.float32), ((0, 0), (0, Jp - J)))
+    relp = jnp.pad(release.astype(jnp.int32), (0, Jp - J))[None, :]
+    predp = jnp.pad(pred.astype(jnp.float32), ((0, Jp - J), (0, Jp - J)))
+    capsp = caps.astype(jnp.float32)[None, :]
+
+    start, finish, okc = pl.pallas_call(
+        functools.partial(_kernel, T=T, Tp=Tp, J=J),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, M, Jp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (0, 0)),
+            pl.BlockSpec((Jp, Jp), lambda b: (0, 0)),
+            pl.BlockSpec((1, M), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Jp), jnp.int32),
+            jax.ShapeDtypeStruct((B, Jp), jnp.int32),
+            jax.ShapeDtypeStruct((B, Jp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(durp, demT, priop, relp, predp, capsp)
+    return start[:, :J], finish[:, :J], okc[:, :J].astype(bool)

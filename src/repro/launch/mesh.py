@@ -30,3 +30,28 @@ def make_solver_mesh(devices=None):
     """1-D chains mesh for the distributed annealer."""
     devices = devices if devices is not None else jax.devices()
     return _mk((len(devices),), ("chains",))
+
+
+def make_planner_mesh(chains: int = 1, devices=None):
+    """2-D (prob, chain) mesh for the batched multi-tenant annealer
+    (``Agora.plan_many`` / ``vectorized_anneal_many``): the problem axis
+    spreads over ``len(devices) // chains`` devices, the chain axis over
+    ``chains``. ``chains=1`` keeps the solve bit-identical to the
+    single-device batched result (see core/vectorized.py).
+
+    The problem axis is clamped to the largest power of two that fits, so
+    it always divides the power-of-two problem bucket — on a 6-device host
+    with ``chains=1`` the mesh is (4, 1) and two devices sit out, rather
+    than every ``plan_many`` call failing the bucket-divisibility check."""
+    explicit = devices is not None
+    devices = list(devices) if explicit else jax.devices()
+    n = len(devices)
+    assert chains >= 1 and n % chains == 0, (n, chains)
+    prob = 1 << ((n // chains).bit_length() - 1)
+    if not explicit and prob * chains == n:
+        return _mk((prob, chains), ("prob", "chain"))
+    # an explicit device list (or a clamped prob axis) must pin the mesh
+    # to exactly those devices — _mk builds over the process-global set
+    import numpy as np
+    sub = np.asarray(devices[:prob * chains]).reshape(prob, chains)
+    return jax.sharding.Mesh(sub, ("prob", "chain"))
