@@ -1,5 +1,6 @@
-"""Batched multi-tenant planning throughput: ``Agora.plan_many`` (one JIT
-trace, one device dispatch for P tenant DAGs) vs a sequential per-DAG loop.
+"""Batched multi-tenant planning throughput: one ``PlannerSession`` batch
+(one JIT trace, one device dispatch for P tenant DAGs) vs a sequential
+per-DAG loop.
 
 Reports, per batch size P in {1, 4, 16, 64}:
   * planner throughput (DAGs/sec) for both modes, after warm-up;
@@ -51,6 +52,7 @@ from repro.cluster.workloads import synth_trace  # noqa: E402
 from repro.core.agora import Agora  # noqa: E402
 from repro.core.dag import concat_problems  # noqa: E402
 from repro.core.objectives import Goal  # noqa: E402
+from repro.core.session import PlanRequest  # noqa: E402
 from repro.core.sgs import (sgs_schedule, validate_schedule_many)  # noqa: E402
 from repro.core.vectorized import VecConfig  # noqa: E402
 
@@ -68,14 +70,14 @@ def run(batch_sizes, *, tasks: int, cfg: VecConfig, check: bool,
     agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
                   vec_cfg=cfg)
 
+    session = agora.session()
+
     # warm-up: trace/compile both paths at each P's shape so the measured
     # numbers are steady-state planner throughput, not XLA compile time
     warm = make_dags(max(batch_sizes), cluster, tasks=tasks, seed=99)
+    t_single_warm = session.warmup(warm[0])[1]
     t0 = time.monotonic()
-    agora.plan_many([warm[0]])
-    t_single_warm = time.monotonic() - t0
-    t0 = time.monotonic()
-    agora.plan_many([warm[0]])
+    session.plan([PlanRequest(dag=warm[0])])
     t_single = time.monotonic() - t0
     emit("plan_single_warm", t_single_warm * 1e6, f"J={tasks}")
     emit("plan_single_steady", t_single * 1e6, f"J={tasks}")
@@ -83,13 +85,14 @@ def run(batch_sizes, *, tasks: int, cfg: VecConfig, check: bool,
     status = 0
     for P in batch_sizes:
         dags = make_dags(P, cluster, tasks=tasks, seed=7)
+        reqs = [PlanRequest(dag=d) for d in dags]
         # precompute reference points once: both modes pay the same host cost
-        agora.plan_many(dags[:P])          # compile at this (P, Jmax) shape
+        session.plan(reqs)                 # compile at this (P, Jmax) shape
         t0 = time.monotonic()
-        plans = agora.plan_many(dags)
+        plans = [r.plan for r in session.plan(reqs)]
         t_batch = time.monotonic() - t0
         t0 = time.monotonic()
-        seq = [agora.plan_many([d])[0] for d in dags]
+        seq = [session.plan([PlanRequest(dag=d)])[0].plan for d in dags]
         t_seq = time.monotonic() - t0
 
         violations = sum(len(p.validate()) for p in plans)
@@ -187,12 +190,15 @@ def run_shared(*, cfg: VecConfig, tenants: int, metrics: dict) -> int:
                   vec_cfg=cfg)
     dags = make_contended_dags(tenants, cluster, seed=13)
 
-    agora.plan_many(dags, shared_capacity=True)       # compile
+    reqs = [PlanRequest(dag=d) for d in dags]
+    sess_shared = agora.session(shared_capacity=True)
+    sess_iso = agora.session()
+    sess_shared.plan(reqs)                            # compile
     t0 = time.monotonic()
-    shared = agora.plan_many(dags, shared_capacity=True)
+    shared = [r.plan for r in sess_shared.plan(reqs)]
     t_shared = time.monotonic() - t0
     t0 = time.monotonic()
-    isolated = agora.plan_many(dags)
+    isolated = [r.plan for r in sess_iso.plan(reqs)]
     t_iso = time.monotonic() - t0
 
     problems = [p.problem for p in shared]
@@ -226,9 +232,10 @@ def run_shared(*, cfg: VecConfig, tenants: int, metrics: dict) -> int:
 
     agora_w = Agora(cluster, goal=goal, solver="vectorized",
                     vec_cfg=dataclasses.replace(cfg, joint_accept=True))
-    agora_w.plan_many(dags, shared_capacity=True)     # compile
+    sess_w = agora_w.session(shared_capacity=True)
+    sess_w.plan(reqs)                                 # compile
     t0 = time.monotonic()
-    welfare = agora_w.plan_many(dags, shared_capacity=True)
+    welfare = [r.plan for r in sess_w.plan(reqs)]
     t_welfare = time.monotonic() - t0
     viol_w = list(welfare[0].joint_errors or [])
     viol_w += validate_schedule_many(

@@ -84,6 +84,15 @@ def compare(prev: dict, curr: dict, max_regression: float) -> int:
               f"{c_fu[key].get('speedup'):.2f}x "
               f"(advisory; parity + compiled >=1.5x gates run inside the "
               f"benchmark)")
+    # per-bucket warmup vs steady-state plan latency (PlannerSession stats;
+    # the zero-retrace gate itself runs inside bench_streaming)
+    p_lat, c_lat = prev.get("latency") or {}, curr.get("latency") or {}
+    for b in sorted(set(p_lat) & set(c_lat), key=lambda s: int(s)):
+        pw, cw = p_lat[b].get("warmup_s"), c_lat[b].get("warmup_s")
+        ps, cs = p_lat[b].get("steady_s"), c_lat[b].get("steady_s")
+        print(f"bucket P={b} plan latency: warmup {pw:.2f}s -> {cw:.2f}s, "
+              f"steady {ps * 1e3:.0f}ms -> {cs * 1e3:.0f}ms "
+              f"(advisory; compile-once / serve-many gap)")
     return status
 
 

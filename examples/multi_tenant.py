@@ -77,17 +77,25 @@ def main(argv=None):
           f"speculative dups={result.speculations}")
 
     # elastic: cluster loses 25% capacity mid-flight -> re-plan remainder
+    # through the same session API the serving loop uses
     done = [j for j, t in result.task_finish.items()
             if t <= result.makespan * 0.4]
     smaller = Cluster(cluster.types,
                       tuple(int(c * 0.75) for c in cluster.capacities))
-    replanned = agora.replan(plan, now=result.makespan * 0.4, done=done,
-                             cluster=smaller)
+    replanned = agora.session().replan(plan, now=result.makespan * 0.4,
+                                       done=done, cluster=smaller).plan
     print(f"\nelastic re-plan after losing 25% capacity: "
           f"{replanned.problem.num_tasks} remaining tasks, "
           f"new makespan {replanned.makespan:.0f}s, "
           f"cost ${replanned.cost:.2f}")
     assert not replanned.validate()
+
+    # the serving loop above rode ONE PlannerSession — the zero-retrace
+    # contract is observable instead of implied
+    st = runner.session.stats
+    print(f"\nsession stats: {st.plans} batches, {st.trace_count} traces, "
+          f"{st.cache_hits} cache hits "
+          f"(buckets {sorted(st.buckets)})")
 
 
 if __name__ == "__main__":

@@ -1,28 +1,35 @@
 """AGORA front-door: plan one or more DAGs against a heterogeneous cluster.
 
 Mirrors the system architecture of Fig. 5: the Predictor has already turned
-event logs into per-task option grids (``Task.options``); ``Agora.plan``
-co-optimizes configurations + schedule with the selected solver and returns a
-``Plan`` the flow executor can run. ``replan`` supports the multi-DAG /
-elastic triggers of §5.5.1 (new submissions every 15 min or queue pressure,
-node loss, straggler re-estimation).
+event logs into per-task option grids (``Task.options``); planning is served
+through ``PlannerSession`` objects (``Agora.session(...)`` — the
+compile-once / serve-many front door, see ``core/session.py`` and
+docs/api.md).  ``Agora.plan`` / ``plan_many`` / ``replan`` remain as thin
+compatibility wrappers over a default session; ``replan`` supports the
+multi-DAG / elastic triggers of §5.5.1 (new submissions every 15 min or
+queue pressure, node loss, straggler re-estimation).
+
+This module also registers the sequential HOST engines with the
+``SolveSpec -> engine`` registry (``core/vectorized.py``): host-side
+solvers ("anneal", "ising") and the legacy 1-D chains-mesh mode have no
+batched device path, so they serve isolated batches as a per-problem loop
+and shared batches as one joint solve split back per tenant.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.cluster.catalog import Cluster
-from repro.core.annealer import AnnealConfig, anneal, reference_point
+from repro.core.annealer import AnnealConfig, reference_point
 from repro.core.dag import DAG, FlatProblem, concat_problems, flatten
 from repro.core.objectives import Goal, Solution
 from repro.core.sgs import (schedule_cost, validate_schedule,
                             validate_schedule_many)
-from repro.core.vectorized import (VecConfig, vectorized_anneal,
-                                   vectorized_anneal_many,
-                                   vectorized_anneal_shared)
+from repro.core.vectorized import SolveBatch, VecConfig, register_engine
 
 
 @dataclasses.dataclass
@@ -62,6 +69,116 @@ class Plan:
         return out
 
 
+# ---------------------------------------------------------------------------
+# Sequential host engines (SolveSpec registry entries)
+# ---------------------------------------------------------------------------
+
+
+def _sequential_solve(batch: SolveBatch):
+    """Shared body of the host engines: isolated batches loop the
+    spec-faithful single-problem solver; shared batches run ONE joint
+    co-scheduled solve and split it back into per-tenant solutions on the
+    common timeline (with the event-exact joint validation attached)."""
+    if not batch.spec.shared_capacity:
+        return [batch.solve_single(p, r, g)
+                for p, r, g in zip(batch.problems, batch.refs,
+                                   batch.goals)], None
+    joint = concat_problems(batch.problems)
+    joint_sol = batch.solve_single(joint, reference_point(joint, batch.cluster),
+                                   batch.goal)
+    sols: List[Solution] = []
+    per_tenant = []
+    off = 0
+    for prob, ref, g in zip(batch.problems, batch.refs, batch.goals):
+        Jp = prob.num_tasks
+        sl = slice(off, off + Jp)
+        oi = joint_sol.option_idx[sl]
+        s, f = joint_sol.start[sl], joint_sol.finish[sl]
+        cost = schedule_cost(prob, oi, batch.cluster.prices_per_sec)
+        mk = float(f.max())
+        sols.append(Solution(oi, s, f, mk, cost,
+                             g.energy(mk, cost, ref[0], ref[1]),
+                             solver=joint_sol.solver + "-shared-split"))
+        per_tenant.append((oi, s, f))
+        off += Jp
+    joint_errors = validate_schedule_many(
+        list(batch.problems), [t[0] for t in per_tenant],
+        [t[1] for t in per_tenant], [t[2] for t in per_tenant],
+        batch.cluster.caps)
+    return sols, joint_errors
+
+
+# "host-anneal" also serves the legacy 1-D chains-mesh vectorized mode —
+# the sequential shape is the same, only batch.solve_single differs
+register_engine("host-anneal", _sequential_solve)
+register_engine("ising", _sequential_solve)
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight re-planning: the problem surgery shared by Agora.replan and
+# PlannerSession.replan
+# ---------------------------------------------------------------------------
+
+
+def remainder_problem(plan: Plan, *, now: float,
+                      done: Sequence[int] = (),
+                      running: Sequence[Tuple[int, float]] = (),
+                      new_dags: Sequence[DAG] = (),
+                      cluster: Optional[Cluster] = None,
+                      duration_scale: Optional[Dict[int, float]] = None
+                      ) -> FlatProblem:
+    """The remainder instance of a mid-flight re-plan: completed tasks
+    dropped, running tasks pinned as zero-choice predecessors-done,
+    durations re-scaled for observed stragglers, new submissions appended
+    (released no earlier than ``now``)."""
+    cluster = cluster or plan.cluster
+    old = plan.problem
+    keep = [j for j in range(old.num_tasks) if j not in set(done)]
+    remap = {j: i for i, j in enumerate(keep)}
+    tasks = []
+    for j in keep:
+        t = old.tasks[j]
+        if duration_scale and j in duration_scale:
+            s = duration_scale[j]
+            t = dataclasses.replace(t, options=[
+                dataclasses.replace(o, duration=o.duration * s,
+                                    cost=o.cost * s) for o in t.options])
+        tasks.append(t)
+    edges = [(remap[a], remap[b]) for a, b in old.edges
+             if a in remap and b in remap]
+    release = np.maximum(old.release[keep], now)
+    # pin running tasks: single option = remaining duration at current cfg
+    run_map = dict(running)
+    for j, rem in run_map.items():
+        if j in remap:
+            i = remap[j]
+            opt = old.tasks[j].options[plan.solution.option_idx[j]]
+            tasks[i] = dataclasses.replace(
+                tasks[i], options=[dataclasses.replace(
+                    opt, duration=max(rem, 1e-6))], default_option=0)
+            release[i] = now
+    # copy the DAG bookkeeping: appending new_dags below must never mutate
+    # the input plan's problem in place
+    prob = FlatProblem(tasks, edges, old.dag_of[keep],
+                       list(old.dag_names), release, cluster.num_resources)
+    for d in new_dags:
+        extra = flatten([d], cluster.num_resources)
+        base = prob.num_tasks
+        prob.tasks.extend(extra.tasks)
+        prob.edges.extend((a + base, b + base) for a, b in extra.edges)
+        prob.dag_of = np.concatenate([prob.dag_of,
+                                      extra.dag_of + len(prob.dag_names)])
+        prob.dag_names.extend(extra.dag_names)
+        prob.release = np.concatenate(
+            [prob.release, np.maximum(extra.release, now)])
+    return prob
+
+
+# ---------------------------------------------------------------------------
+# The front door
+# ---------------------------------------------------------------------------
+
+
 class Agora:
     def __init__(self, cluster: Cluster, goal: Goal = Goal.balanced(),
                  solver: str = "anneal",
@@ -75,35 +192,61 @@ class Agora:
         self.anneal_cfg = anneal_cfg or AnnealConfig()
         self.vec_cfg = vec_cfg or VecConfig()
         self.mesh = mesh
+        # default sessions backing the legacy wrappers, keyed by
+        # (shared_capacity, normalized bucket)
+        self._sessions: Dict[Tuple, "PlannerSession"] = {}  # noqa: F821
 
-    def _chains_mesh(self):
-        """The mesh for SINGLE-problem solves: only a legacy 1-D chains
-        mesh applies there. A 2-axis (prob, chain) planner mesh shards the
-        batched ``plan_many`` paths and must not leak into
-        ``vectorized_anneal`` — its shard specs only name one axis, so a
-        planner mesh would replicate chains over the chain axis and
-        over-constrain the B %% devices assert."""
-        if self.mesh is not None and len(self.mesh.axis_names) == 1:
-            return self.mesh
-        return None
+    # -- the session front door ----------------------------------------
+
+    def session(self, *, shared_capacity: bool = False, bucket_p=None,
+                mesh="inherit", goal: Optional[Goal] = None,
+                vec_cfg: Optional[VecConfig] = None) -> "PlannerSession":  # noqa: F821
+        """Open a compile-once / serve-many ``PlannerSession``.
+
+        The session pins the static solve signature (engine, ``VecConfig``,
+        mesh, bucket schedule) at construction: ``warmup()`` compiles each
+        power-of-two bucket ahead of traffic, ``plan(requests)`` /
+        ``replan(...)`` then serve with zero re-tracing inside a warmed
+        bucket, and ``session.stats`` makes the contract observable.  See
+        ``core/session.py`` and docs/api.md for the lifecycle.
+        """
+        from repro.core.session import _UNSET, PlannerSession
+        return PlannerSession(
+            self, shared_capacity=shared_capacity, bucket_p=bucket_p,
+            mesh=_UNSET if isinstance(mesh, str) and mesh == "inherit"
+            else mesh, goal=goal, vec_cfg=vec_cfg)
+
+    def _default_session(self, shared_capacity: bool = False, bucket_p=None):
+        key = (bool(shared_capacity),
+               True if bucket_p is True
+               else (int(bucket_p) if bucket_p else None))
+        # sessions snapshot the Agora's knobs at construction; the legacy
+        # wrappers read them per call, so a reconfigured Agora (new goal,
+        # mesh, cfg, cluster) must rebuild its default session rather than
+        # silently serve the stale pins
+        pins = (self.cluster, self.goal, self.solver, self.anneal_cfg,
+                self.vec_cfg, self.mesh)
+        cached = self._sessions.get(key)
+        if cached is None or any(a is not b for a, b in zip(cached[1], pins)):
+            cached = (self.session(shared_capacity=shared_capacity,
+                                   bucket_p=bucket_p), pins)
+            self._sessions[key] = cached
+        return cached[0]
+
+    # -- legacy compatibility wrappers ----------------------------------
 
     def plan(self, dags: Sequence[DAG],
              ref: Optional[Tuple[float, float]] = None,
              goal: Optional[Goal] = None) -> Plan:
-        goal = goal or self.goal
-        problem = flatten(list(dags), self.cluster.num_resources)
-        if ref is None:
-            ref = reference_point(problem, self.cluster)
-        if self.solver == "anneal":
-            sol = anneal(problem, self.cluster, goal, self.anneal_cfg, ref)
-        elif self.solver == "vectorized":
-            sol = vectorized_anneal(problem, self.cluster, goal,
-                                    self.vec_cfg, ref,
-                                    mesh=self._chains_mesh())
-        else:
-            from repro.core.ising import ising_anneal
-            sol = ising_anneal(problem, self.cluster, goal, ref=ref)
-        return Plan(problem, sol, goal, self.cluster, ref)
+        """Co-schedule ``dags`` into ONE plan on a shared timeline.
+
+        Compatibility wrapper over the default ``PlannerSession``
+        (``session.plan_joint``); kept as the stable one-shot front door.
+        For serve-many traffic (batches, streaming arrivals, warmed
+        buckets) use ``Agora.session(...)`` — see docs/api.md.
+        """
+        return self._default_session().plan_joint(dags, ref=ref,
+                                                  goal=goal).plan
 
     def plan_many(self, dags: Sequence[DAG],
                   refs: Optional[Sequence[Tuple[float, float]]] = None,
@@ -112,107 +255,46 @@ class Agora:
                   bucket_p=None) -> List[Plan]:
         """Plan P tenant DAGs in ONE batched device solve.
 
-        The multi-tenant front door: where ``plan(dags)`` co-schedules its
-        inputs on one shared timeline, ``plan_many`` keeps per-tenant plans
-        and anneals all of them simultaneously — the problems are
-        pad-and-stacked and every (chain, problem) advances in lockstep
-        under a single JIT dispatch, so planning N tenants costs one device
-        round trip instead of N.
+        .. deprecated::
+            ``plan_many`` is a thin compatibility wrapper over a default
+            ``PlannerSession`` and emits a ``DeprecationWarning``.  New
+            code should open a session and serve typed requests::
 
-        ``shared_capacity=False`` (default) isolates tenants: each draws
-        from a private copy of the full cluster quota, so the batch solve is
-        embarrassingly parallel but the plans cannot be dispatched together
-        without oversubscribing the cluster. ``shared_capacity=True``
-        couples the batch through one cluster-wide usage tensor (the
-        paper's co-scheduling at scale): the returned plans share a
-        timeline, are re-evaluated event-exactly with one joint host SGS
-        pass, and carry ``joint_errors`` — the joint validation result
-        asserting no event time exceeds global capacity.
+                session = agora.session(shared_capacity=..., bucket_p=...)
+                session.warmup(template_dag)        # compile ahead of traffic
+                results = session.plan([PlanRequest(dag=d, goal=g), ...])
 
-        Falls back for host-side solvers ("anneal", "ising") and mesh mode:
-        a sequential per-DAG loop when isolated, a single joint ``plan``
-        split back into per-tenant plans when shared.
+            The parallel ``refs``/``goals``/``bucket_p`` list kwargs map to
+            ``PlanRequest`` fields and session pins — the full migration
+            table lives in docs/api.md.  Plans returned here are bit-for-bit
+            identical to the session path (differential-tested in
+            tests/test_session.py).
 
-        ``goals`` attaches a per-tenant objective (SLA classes: per-tenant
-        weights plus a deadline hinge term) to each DAG; ``bucket_p`` pads
-        the batched device solve's problem axis to a power-of-two bucket so
-        a streaming arrival inside the bucket re-plans with zero re-tracing
-        (padded slots are masked and bit-for-bit inert).
-
-        A 2-axis (problems x chains) ``mesh`` on the Agora (see
-        ``launch.mesh.make_planner_mesh``) shards the batched solve with
-        ``shard_map``: isolated mode shards problems x chains (so P scales
-        with devices), shared mode shards chains (the coupled decode is
-        joint over problems). A legacy 1-D chains mesh keeps the
-        per-problem fallback loop.
+        ``shared_capacity=False`` (default) isolates tenants (each draws
+        from a private copy of the full cluster quota);
+        ``shared_capacity=True`` couples the batch through one
+        cluster-wide usage tensor and attaches ``joint_errors``.  A
+        ``None`` entry inside ``refs`` means "recompute this tenant's
+        reference point"; malformed entries and length mismatches raise
+        ``ValueError`` naming the offending request index.
         """
+        from repro.core.session import (PlanRequest, PlannerDeprecationWarning,
+                                        check_goals, check_refs)
+        warnings.warn(
+            "Agora.plan_many is a compatibility wrapper; use "
+            "Agora.session(...).plan([PlanRequest(...), ...]) "
+            "(see docs/api.md)", PlannerDeprecationWarning, stacklevel=2)
         dags = list(dags)
         if not dags:
             return []
-        problems = [flatten([d], self.cluster.num_resources) for d in dags]
-        if refs is None:
-            refs = [reference_point(p, self.cluster) for p in problems]
-        refs = list(refs)
-        goals = list(goals) if goals is not None else [self.goal] * len(dags)
-        assert len(goals) == len(dags)
-        planner_mesh = (self.mesh if self.mesh is not None
-                        and len(self.mesh.axis_names) == 2 else None)
-        if self.solver != "vectorized" or (self.mesh is not None
-                                           and planner_mesh is None):
-            # host-side solvers have no batched path; with a legacy 1-D
-            # chains mesh, plan() shards chains + replica-exchanges per
-            # problem — the batched engine only shards 2-axis planner
-            # meshes
-            if shared_capacity:
-                return self._plan_shared_fallback(dags, problems, refs, goals)
-            return [self.plan([d], ref=r, goal=g)
-                    for d, r, g in zip(dags, refs, goals)]
-        if shared_capacity:
-            sols, joint_errors = vectorized_anneal_shared(
-                problems, self.cluster, self.goal, self.vec_cfg, refs,
-                goals=goals, bucket_p=bucket_p, mesh=planner_mesh)
-            return [Plan(p, s, g, self.cluster, r,
-                         joint_errors=joint_errors)
-                    for p, s, r, g in zip(problems, sols, refs, goals)]
-        sols = vectorized_anneal_many(problems, self.cluster, self.goal,
-                                      self.vec_cfg, refs, goals=goals,
-                                      bucket_p=bucket_p, mesh=planner_mesh)
-        return [Plan(p, s, g, self.cluster, r)
-                for p, s, r, g in zip(problems, sols, refs, goals)]
-
-    def _plan_shared_fallback(self, dags: Sequence[DAG],
-                              problems: Sequence[FlatProblem],
-                              refs: Sequence[Tuple[float, float]],
-                              goals: Optional[Sequence[Goal]] = None,
-                              ) -> List[Plan]:
-        """Shared-capacity planning without the coupled device path: solve
-        ONE joint co-scheduled plan, then split it back into per-tenant
-        plans on the shared timeline."""
-        goals = list(goals) if goals is not None else [self.goal] * len(dags)
-        joint = self.plan(dags)
-        plans: List[Plan] = []
-        per_tenant = []
-        off = 0
-        for prob, ref, g in zip(problems, refs, goals):
-            Jp = prob.num_tasks
-            sl = slice(off, off + Jp)
-            oi = joint.solution.option_idx[sl]
-            s, f = joint.solution.start[sl], joint.solution.finish[sl]
-            cost = schedule_cost(prob, oi, self.cluster.prices_per_sec)
-            mk = float(f.max())
-            sol = Solution(oi, s, f, mk, cost,
-                           g.energy(mk, cost, ref[0], ref[1]),
-                           solver=joint.solution.solver + "-shared-split")
-            per_tenant.append((oi, s, f))
-            plans.append(Plan(prob, sol, g, self.cluster, ref))
-            off += Jp
-        joint_errors = validate_schedule_many(
-            list(problems), [t[0] for t in per_tenant],
-            [t[1] for t in per_tenant], [t[2] for t in per_tenant],
-            self.cluster.caps)
-        for p in plans:
-            p.joint_errors = joint_errors
-        return plans
+        refs = check_refs(refs, len(dags))
+        goals = check_goals(goals, len(dags))
+        requests = [PlanRequest(dag=d,
+                                goal=goals[i] if goals is not None else None,
+                                ref=refs[i] if refs is not None else None)
+                    for i, d in enumerate(dags)]
+        sess = self._default_session(shared_capacity, bucket_p)
+        return [r.plan for r in sess.plan(requests)]
 
     def replan(self, plan: Plan, *, now: float,
                done: Sequence[int] = (),
@@ -222,52 +304,21 @@ class Agora:
                duration_scale: Optional[Dict[int, float]] = None) -> Plan:
         """Re-solve the remainder: completed tasks dropped, running tasks
         pinned as zero-duration predecessors-done, durations re-scaled for
-        observed stragglers, optionally on a resized cluster (elastic)."""
-        cluster = cluster or self.cluster
-        old = plan.problem
-        keep = [j for j in range(old.num_tasks) if j not in set(done)]
-        remap = {j: i for i, j in enumerate(keep)}
-        tasks = []
-        for j in keep:
-            t = old.tasks[j]
-            if duration_scale and j in duration_scale:
-                s = duration_scale[j]
-                t = dataclasses.replace(t, options=[
-                    dataclasses.replace(o, duration=o.duration * s,
-                                        cost=o.cost * s) for o in t.options])
-            tasks.append(t)
-        edges = [(remap[a], remap[b]) for a, b in old.edges
-                 if a in remap and b in remap]
-        release = np.maximum(old.release[keep], now)
-        # pin running tasks: single option = remaining duration at current cfg
-        run_map = dict(running)
-        for j, rem in run_map.items():
-            if j in remap:
-                i = remap[j]
-                opt = old.tasks[j].options[plan.solution.option_idx[j]]
-                tasks[i] = dataclasses.replace(
-                    tasks[i], options=[dataclasses.replace(
-                        opt, duration=max(rem, 1e-6))], default_option=0)
-                release[i] = now
-        prob = FlatProblem(tasks, edges, old.dag_of[keep],
-                           old.dag_names, release, cluster.num_resources)
-        for d in new_dags:
-            extra = flatten([d], cluster.num_resources)
-            base = prob.num_tasks
-            prob.tasks.extend(extra.tasks)
-            prob.edges.extend((a + base, b + base) for a, b in extra.edges)
-            prob.dag_of = np.concatenate([prob.dag_of,
-                                          extra.dag_of + len(prob.dag_names)])
-            prob.dag_names.extend(extra.dag_names)
-            prob.release = np.concatenate(
-                [prob.release, np.maximum(extra.release, now)])
-        ref = reference_point(prob, cluster)
-        if self.solver == "anneal":
-            sol = anneal(prob, cluster, self.goal, self.anneal_cfg, ref)
-        else:
-            sol = vectorized_anneal(prob, cluster, self.goal, self.vec_cfg,
-                                    ref, mesh=self._chains_mesh())
-        return Plan(prob, sol, self.goal, cluster, ref)
+        observed stragglers, optionally on a resized cluster (elastic).
+
+        .. deprecated::
+            Thin compatibility wrapper over ``PlannerSession.replan``
+            (bit-for-bit identical, differential-tested); emits a
+            ``DeprecationWarning``.  See docs/api.md.
+        """
+        from repro.core.session import PlannerDeprecationWarning
+        warnings.warn(
+            "Agora.replan is a compatibility wrapper; use "
+            "Agora.session(...).replan(...) (see docs/api.md)",
+            PlannerDeprecationWarning, stacklevel=2)
+        return self._default_session().replan(
+            plan, now=now, done=done, running=running, new_dags=new_dags,
+            cluster=cluster, duration_scale=duration_scale).plan
 
 
 def combine_plans(plans: Sequence[Plan]) -> Plan:

@@ -29,7 +29,7 @@ import dataclasses
 import math
 import time
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +67,97 @@ class VecConfig:
     # the Pallas interpreter — bit-identical, used by CPU CI for parity.
     use_pallas: Optional[bool] = None
     interpret: Optional[bool] = None
+
+
+# ---------------------------------------------------------------------------
+# SolveSpec -> engine registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """The static solve signature a ``PlannerSession`` pins at construction.
+
+    Everything that selects an engine (and, downstream, a JIT cache entry
+    family) lives here: the solver kind, whether tenants couple through one
+    cluster-wide usage tensor, and the mesh arity. The four historical
+    dispatch branches of ``Agora.plan_many`` — isolated/shared x device/
+    host-fallback, plus the legacy 1-D chains-mesh loop — collapse into
+    ``resolve_engine(spec)``.
+    """
+    solver: str = "vectorized"       # "vectorized" | "anneal" | "ising"
+    shared_capacity: bool = False
+    mesh_axes: int = 0               # 0 = no mesh, 1 = legacy chains, 2 = planner
+
+    def __post_init__(self):
+        if self.solver not in ("vectorized", "anneal", "ising"):
+            raise ValueError(f"unknown solver {self.solver!r} "
+                             f"(expected vectorized | anneal | ising)")
+        if self.mesh_axes not in (0, 1, 2):
+            raise ValueError(f"mesh_axes must be 0, 1 or 2, "
+                             f"got {self.mesh_axes}")
+
+    @property
+    def engine_key(self) -> str:
+        """Which registered engine serves this spec.
+
+        Host-side solvers have no batched device path, and a legacy 1-D
+        chains mesh only shards the single-problem solve — both route
+        through the sequential host engine (isolated: per-problem loop;
+        shared: one joint solve split back per tenant)."""
+        if self.solver == "ising":
+            return "ising"
+        if self.solver == "anneal" or self.mesh_axes == 1:
+            return "host-anneal"
+        return "shared" if self.shared_capacity else "isolated"
+
+
+@dataclasses.dataclass
+class SolveBatch:
+    """One engine invocation: P per-tenant problems plus the session-pinned
+    knobs. ``solve_single`` is the spec-faithful single-problem solver the
+    sequential host engines loop over (built by the session so host
+    fallbacks honor the same AnnealConfig / chains mesh the legacy front
+    door used)."""
+    spec: SolveSpec
+    problems: List[FlatProblem]
+    cluster: Cluster
+    goal: Goal                                   # session default / joint goal
+    goals: List[Goal]                            # per-tenant objectives
+    refs: List[Tuple[float, float]]
+    cfg: VecConfig
+    bucket_p: object = None
+    mesh: object = None
+    solve_single: Optional[Callable] = None      # (problem, ref, goal) -> Solution
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """A registered solve engine.
+
+    ``fn(batch) -> (solutions, joint_errors)``; ``cache_size`` reports the
+    live JIT cache entries backing the engine (0 for host engines) so a
+    session can account traces vs cache hits at the API level instead of
+    tests poking ``_cache_size()`` on private jit wrappers."""
+    key: str
+    fn: Callable[["SolveBatch"], Tuple[List[Solution], Optional[List[str]]]]
+    cache_size: Callable[[], int]
+
+
+_ENGINES: Dict[str, Engine] = {}
+
+
+def register_engine(key: str, fn, cache_size=lambda: 0) -> None:
+    _ENGINES[key] = Engine(key, fn, cache_size)
+
+
+def resolve_engine(spec: SolveSpec) -> Engine:
+    try:
+        return _ENGINES[spec.engine_key]
+    except KeyError:
+        raise KeyError(f"no engine registered for {spec} "
+                       f"(key {spec.engine_key!r}; registered: "
+                       f"{sorted(_ENGINES)})") from None
 
 
 # ---------------------------------------------------------------------------
@@ -1013,3 +1104,32 @@ def vectorized_anneal(problem: FlatProblem, cluster: Cluster, goal: Goal,
                    solver="agora-vectorized")
     sol.solve_seconds = time.monotonic() - t_start
     return sol
+
+
+# ---------------------------------------------------------------------------
+# Engine registration (device paths; the sequential host engines register in
+# core/agora.py, the other side of this boundary)
+# ---------------------------------------------------------------------------
+
+
+def _isolated_engine(batch: SolveBatch):
+    sols = vectorized_anneal_many(batch.problems, batch.cluster, batch.goal,
+                                  batch.cfg, batch.refs, goals=batch.goals,
+                                  bucket_p=batch.bucket_p, mesh=batch.mesh)
+    return sols, None
+
+
+def _shared_engine(batch: SolveBatch):
+    return vectorized_anneal_shared(batch.problems, batch.cluster, batch.goal,
+                                    batch.cfg, batch.refs, goals=batch.goals,
+                                    bucket_p=batch.bucket_p, mesh=batch.mesh)
+
+
+register_engine(
+    "isolated", _isolated_engine,
+    cache_size=lambda: (_run_sa_many_jit._cache_size()
+                        + _run_sa_many_sharded_jit._cache_size()))
+register_engine(
+    "shared", _shared_engine,
+    cache_size=lambda: (_run_sa_shared_jit._cache_size()
+                        + _run_sa_shared_sharded_jit._cache_size()))

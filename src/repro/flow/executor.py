@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.agora import Agora, Plan
+from repro.core.session import PlanRequest
 
 
 @dataclasses.dataclass
@@ -383,7 +384,7 @@ class TenantRecord:
 
 class MultiTenantRunner:
     """Airflow-style serving loop: DAG submissions stream in; every planning
-    round batches the pending set through ``Agora.plan_many`` (ONE device
+    round batches the pending set through one ``PlannerSession`` (ONE device
     dispatch for the whole batch) and dispatches the resulting plans to the
     discrete-event executor. DAGs arriving mid-round queue for the next
     round — the re-plan trigger re-batches the still-pending set, so a burst
@@ -394,9 +395,9 @@ class MultiTenantRunner:
     * isolated (default) — each DAG is planned and simulated against the
       full cluster (per-tenant capacity quota), which is what lets the batch
       solve stay embarrassingly parallel on device.
-    * ``shared_cluster=True`` — the batch is planned with
-      ``plan_many(shared_capacity=True)`` (one coupled solve against the
-      global capacity vector) and dispatched as ONE joint workflow drawing
+    * ``shared_cluster=True`` — the batch is planned by a
+      ``shared_capacity`` session (one coupled solve against the global
+      capacity vector) and dispatched as ONE joint workflow drawing
       from a single capacity pool: planned start times gate task launches so
       the executed schedule honors the co-scheduled capacity staggering. The
       next round replans at the later of the pool draining (completion) and
@@ -410,12 +411,19 @@ class MultiTenantRunner:
     """
 
     def __init__(self, agora: Agora, dags, cfg: Optional[FlowConfig] = None,
-                 window: float = 900.0, shared_cluster: bool = False):
+                 window: float = 900.0, shared_cluster: bool = False,
+                 bucket_p=None):
         self.agora = agora
         self.dags = sorted(dags, key=lambda d: d.release_time)
         self.cfg = cfg or FlowConfig()
         self.window = float(window)      # min spacing of planning rounds
         self.shared_cluster = shared_cluster
+        # every planning round rides ONE PlannerSession: the solve
+        # signature (engine, VecConfig, mesh, bucket schedule) is pinned
+        # once and the session's stats expose the trace/cache behavior of
+        # the whole run
+        self.session = agora.session(shared_capacity=shared_cluster,
+                                     bucket_p=bucket_p)
         self.rounds: List[int] = []      # batch size per planning round
         self.events: List[str] = []
 
@@ -446,8 +454,8 @@ class MultiTenantRunner:
             pending = [d for d in pending if d.release_time > clock + 1e-9]
             # re-anchor each tenant's plan at the round start
             now_dags = [dataclasses.replace(d, release_time=0.0) for d in batch]
-            plans = self.agora.plan_many(
-                now_dags, shared_capacity=self.shared_cluster)
+            plans = [r.plan for r in self.session.plan(
+                [PlanRequest(dag=d) for d in now_dags])]
             self.rounds.append(len(batch))
             self.events.append(
                 f"[t={clock:9.1f}] round {len(self.rounds)}: planned "
@@ -491,9 +499,10 @@ class MultiTenantRunner:
                 # joint schedule doesn't inherit stale staggering
                 redo = [dataclasses.replace(d, release_time=0.0)
                         for d, _ in good]
-                good = list(zip([d for d, _ in good],
-                                self.agora.plan_many(redo,
-                                                     shared_capacity=True)))
+                good = list(zip(
+                    [d for d, _ in good],
+                    [r.plan for r in self.session.plan(
+                        [PlanRequest(dag=d) for d in redo])]))
                 self.events.append(
                     f"[t={clock:9.1f}] re-planned {len(good)} valid tenants "
                     f"after excluding {len(bad)}")

@@ -7,15 +7,19 @@ of draining fixed rolling-horizon windows.
 
 Three mechanisms compose:
 
-* bucketed admission — every planning round is solved through
-  ``Agora.plan_many(bucket_p=...)``: the problem axis is padded to a
-  power-of-two bucket, so a tenant arriving mid-stream re-plans under the
-  SAME JIT cache entry (zero re-tracing) as long as it lands inside the
-  current bucket.  Padded slots are fully masked and bit-for-bit inert.
+* bucketed admission — every planning round is served by ONE
+  ``PlannerSession`` pinned to a power-of-two bucket schedule
+  (``agora.session(bucket_p=...)``): a tenant arriving mid-stream re-plans
+  under the SAME JIT cache entry (zero re-tracing, observable through
+  ``session.stats``) as long as it lands inside the current bucket.
+  Padded slots are fully masked and bit-for-bit inert.  Guaranteed
+  arrivals additionally pass ``session.admit`` — provably infeasible
+  deadlines are rejected (or downgraded) up front, with the verdict
+  recorded on ``StreamRecord.admission``.
 * deadline classes — each tenant's SLA class maps to a per-tenant ``Goal``
   (``guaranteed`` carries a deadline hinge term, ``standard`` the base
-  blend, ``best_effort`` a cost-leaning blend) that flows through
-  ``plan_many(goals=...)`` into the coupled annealer's per-tenant energy.
+  blend, ``best_effort`` a cost-leaning blend) carried on its typed
+  ``PlanRequest`` into the coupled annealer's per-tenant energy.
 * preemptive re-planning — each dispatch runs only until the next arrival
   (``FlowConfig.launch_horizon``): in-flight tasks drain, not-yet-launched
   tasks return to the control plane and are re-planned together with the
@@ -40,14 +44,13 @@ import numpy as np
 from repro.core.agora import Agora, Plan, combine_plans
 from repro.core.dag import DAG
 from repro.core.objectives import Goal
+# SLA classes live with the typed request surface now; re-exported here for
+# compatibility with existing callers
+from repro.core.session import (SLA_BEST_EFFORT, SLA_CLASSES, SLA_GUARANTEED,
+                                SLA_STANDARD, PlanRequest)
 from repro.flow.executor import (FlowConfig, FlowResult, FlowRunner,
                                  MultiTenantRunner, TenantRecord,
                                  _backoff_delay)
-
-SLA_GUARANTEED = "guaranteed"
-SLA_STANDARD = "standard"
-SLA_BEST_EFFORT = "best_effort"
-SLA_CLASSES = (SLA_GUARANTEED, SLA_STANDARD, SLA_BEST_EFFORT)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +100,12 @@ class StreamConfig:
     max_deferrals: int = 4             # at-risk guaranteed tenants may wait
     #                                    for in-flight residue this many
     #                                    times before dispatching anyway
+    # admission control (PlannerSession.admit): guaranteed arrivals whose
+    # deadline is PROVABLY infeasible (critical-path lower bound against
+    # the committed load) are rejected — or downgraded to standard class —
+    # instead of best-effort missed; the decision rides StreamRecord
+    admission_control: bool = True
+    admission: str = "reject"          # "reject" | "downgrade"
 
 
 def sla_goal(req: TenantRequest, base: Goal, now: float,
@@ -123,6 +132,10 @@ class StreamRecord(TenantRecord):
     deadline_met: bool = True
     preemptions: int = 0
     rounds: int = 0                    # planning rounds the tenant rode in
+    # admission-control verdict: "admitted", "rejected" (provably
+    # infeasible, never planned) or "downgraded" (served as standard class;
+    # sla/deadline report the ORIGINAL guaranteed request)
+    admission: str = "admitted"
 
 
 @dataclasses.dataclass(eq=False)
@@ -148,6 +161,15 @@ class _TenantState:
     rounds: int = 0
     first_planned: float = math.inf
     last_plan_makespan: float = math.nan
+    admission: str = "admitted"
+    admission_checked: bool = False
+    declared_sla: str = ""             # original class (survives downgrade)
+    declared_deadline: float = math.nan
+
+    def __post_init__(self):
+        if not self.declared_sla:
+            self.declared_sla = self.req.sla
+            self.declared_deadline = self.req.deadline
 
     @property
     def name(self) -> str:
@@ -181,10 +203,16 @@ class StreamingRunner(MultiTenantRunner):
                  stream: Optional[StreamConfig] = None,
                  shared_cluster: bool = True):
         requests = sorted(requests, key=lambda r: r.submit)
-        super().__init__(agora, [r.dag for r in requests], cfg,
-                         window=0.0, shared_cluster=shared_cluster)
-        self.requests = requests
+        # ONE session for the whole stream (built by the parent): the
+        # bucket schedule and engine are pinned here, residual-capacity
+        # snapshots flow through session.plan(capacity=...) per round, and
+        # session.stats carries the zero-retrace evidence the bench gates
+        # assert
         self.stream = stream or StreamConfig()
+        super().__init__(agora, [r.dag for r in requests], cfg,
+                         window=0.0, shared_cluster=shared_cluster,
+                         bucket_p=self.stream.bucket_p)
+        self.requests = requests
         self.preempt_events = 0
         self.arrival_replans = 0
         # (round_clock, [(tenant_name, plan)], FlowResult) per dispatch —
@@ -204,33 +232,20 @@ class StreamingRunner(MultiTenantRunner):
                                       retry_backoff=self.stream.preempt_backoff)
         return max(_backoff_delay(cfg, state.preemptions), 1e-6)
 
-    def _agora_for(self, caps_round: np.ndarray) -> Agora:
-        """An Agora planning against the ROUND's free capacity: the full
-        pool minus the residual demand of in-flight tasks from earlier
-        dispatches.  caps is a traced array on device, so round-to-round
-        capacity changes never re-trace."""
-        from repro.cluster.catalog import Cluster
-
-        base = self.agora
-        if np.allclose(caps_round, base.cluster.caps):
-            return base
-        cluster = Cluster(base.cluster.types, tuple(float(c)
-                                                    for c in caps_round))
-        return Agora(cluster, goal=base.goal, solver=base.solver,
-                     anneal_cfg=base.anneal_cfg, vec_cfg=base.vec_cfg,
-                     mesh=base.mesh)
-
     def _plan_batch(self, clock: float, batch: List[_TenantState],
-                    agora: Optional[Agora] = None):
-        """One bucketed, SLA-weighted planning round for the batch."""
+                    caps_round: Optional[np.ndarray] = None):
+        """One bucketed, SLA-weighted planning round for the batch: typed
+        requests through the session, planned against the ROUND's free
+        capacity (the pool minus in-flight residue).  Capacity is a traced
+        array on device, so round-to-round snapshots never re-trace."""
         sc = self.stream
-        agora = agora or self.agora
-        dags = [s.remainder_dag() for s in batch]
-        goals = [sla_goal(s.req, agora.goal, clock, sc) for s in batch]
-        plans = agora.plan_many(dags, goals=goals,
-                                shared_capacity=self.shared_cluster,
-                                bucket_p=sc.bucket_p)
-        return plans
+        requests = [PlanRequest(dag=s.remainder_dag(),
+                                goal=sla_goal(s.req, self.agora.goal, clock,
+                                              sc),
+                                sla=s.req.sla, deadline=s.req.deadline)
+                    for s in batch]
+        return [r.plan for r in self.session.plan(requests,
+                                                  capacity=caps_round)]
 
     def _completion(self, plan: Plan) -> float:
         """Planned completion of one tenant, relative to the round start
@@ -305,9 +320,44 @@ class StreamingRunner(MultiTenantRunner):
                         break
                     clock = nxt
             caps_round = np.maximum(self._residual_caps(clock), 0.0)
-            agora_r = self._agora_for(caps_round)
             batch = [s for s in pending if s.ready_at <= clock + 1e-9]
             pending = [s for s in pending if s.ready_at > clock + 1e-9]
+            # admission control: a fresh guaranteed arrival whose deadline
+            # is PROVABLY infeasible (session.admit's critical-path lower
+            # bound against the committed load) is rejected — or downgraded
+            # to standard class — up front, instead of burning rounds and
+            # preemptions on a tenant no policy can save
+            if sc.sla_aware and sc.admission_control:
+                for s in list(batch):
+                    if s.admission_checked or s.req.sla != SLA_GUARANTEED:
+                        continue
+                    s.admission_checked = True
+                    avail = clock
+                    if not self._structurally_fits(s, caps_round):
+                        release = self._next_release(clock)
+                        if math.isfinite(release):
+                            avail = release
+                    decision = self.session.admit(
+                        PlanRequest(dag=s.remainder_dag(), sla=s.req.sla,
+                                    deadline=s.req.deadline),
+                        now=clock, available_at=avail)
+                    if decision.admitted:
+                        continue
+                    if sc.admission == "downgrade":
+                        s.admission = "downgraded"
+                        s.req = dataclasses.replace(s.req, sla=SLA_STANDARD)
+                        self.events.append(
+                            f"[t={clock:9.1f}] tenant {s.name}: guaranteed "
+                            f"deadline provably infeasible "
+                            f"({decision.reason}) — downgraded to standard")
+                    else:
+                        s.admission = "rejected"
+                        batch.remove(s)
+                        self.events.append(
+                            f"[t={clock:9.1f}] tenant {s.name}: guaranteed "
+                            f"deadline provably infeasible "
+                            f"({decision.reason}) — rejected at admission")
+                        records.append(self._record(s, math.inf, failed=True))
             # capacity-fragmentation guard: a tenant none of whose options
             # fit the round's free sliver waits for the next residue
             # release instead of burning its plan-retry budget
@@ -324,7 +374,7 @@ class StreamingRunner(MultiTenantRunner):
             for s in batch:
                 s.rounds += 1
                 s.first_planned = min(s.first_planned, clock)
-            plans = self._plan_batch(clock, batch, agora_r)
+            plans = self._plan_batch(clock, batch, caps_round)
             self.rounds.append(len(batch))
             self.events.append(
                 f"[t={clock:9.1f}] round {len(self.rounds)}: planned "
@@ -430,7 +480,7 @@ class StreamingRunner(MultiTenantRunner):
                     # usage — re-plan so the next validation/risk check
                     # sees the actual dispatchable staggering
                     replans = self._plan_batch(
-                        clock, [s for s, _ in good], agora_r)
+                        clock, [s for s, _ in good], caps_round)
                     good = list(zip([s for s, _ in good], replans))
                     self.arrival_replans += 1
                     self.events.append(
@@ -577,9 +627,12 @@ class StreamingRunner(MultiTenantRunner):
             realized_makespan=realized,
             cost=s.cost, retries=s.retries, speculations=s.specs,
             plan_retries=s.plan_retries, failed=failed,
-            sla=req.sla, deadline=req.deadline,
-            deadline_met=(not failed) and finished <= req.deadline + 1e-6,
-            preemptions=s.preemptions, rounds=s.rounds)
+            # downgraded tenants report the ORIGINAL guaranteed request
+            sla=s.declared_sla, deadline=s.declared_deadline,
+            deadline_met=(not failed)
+            and finished <= s.declared_deadline + 1e-6,
+            preemptions=s.preemptions, rounds=s.rounds,
+            admission=s.admission)
 
     # ------------------------------------------------------------------
 

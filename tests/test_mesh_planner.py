@@ -13,6 +13,11 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
+
+# test_agora_plan_many_routes_planner_mesh exercises the legacy wrapper on
+# purpose (mesh routing is a session pin now; see tests/test_session.py)
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.cluster.catalog import alibaba_cluster
 from repro.cluster.workloads import synth_trace

@@ -2,6 +2,12 @@
 bit-identical to the single-problem path, every batched plan validates, and
 batch quality tracks per-DAG sequential quality."""
 import numpy as np
+import pytest
+
+# this module exercises the legacy compatibility wrapper on purpose (it is
+# differential-tested against PlannerSession in tests/test_session.py); the
+# -W error::DeprecationWarning CI job enforces migration everywhere else
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.cluster.catalog import alibaba_cluster
 from repro.cluster.workloads import synth_trace

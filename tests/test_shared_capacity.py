@@ -8,6 +8,7 @@ shared layout and must reproduce isolated-mode plans bit-for-bit (identical
 RNG streams, identical per-problem decodes).
 """
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -15,6 +16,10 @@ except ImportError:              # hermetic env: deterministic shim
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.cluster.catalog import Cluster, InstanceType
+
+# exercises the legacy plan_many wrapper on purpose (differential-tested
+# against PlannerSession in tests/test_session.py)
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 from repro.core.agora import Agora, combine_plans
 from repro.core.dag import (DAG, Task, TaskOption, concat_problems, flatten,
                             pack_problems)

@@ -208,6 +208,7 @@ def test_flow_restart_from_state(tmp_path):
     assert not any("launch" in e for e in res2.events[1:])
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_elastic_replan_smaller_cluster():
     from repro.cluster.catalog import Cluster
     ag, plan = _plan()
@@ -221,3 +222,29 @@ def test_elastic_replan_smaller_cluster():
     oi = re.solution.option_idx
     chosen = dem[np.arange(len(oi)), oi]
     assert (chosen <= np.asarray(smaller.caps) + 1e-9).all()
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_session_replan_bit_for_bit_with_legacy_replan():
+    """Replanning mid-flight through PlannerSession.replan produces
+    bit-for-bit the plans of the legacy Agora.replan wrapper (host-anneal
+    solver; the vectorized leg lives in tests/test_session.py), across the
+    elastic-cluster / pinned-running / straggler-rescale surgery."""
+    from repro.cluster.catalog import Cluster
+    ag, plan = _plan()
+    smaller = Cluster(plan.cluster.types,
+                      tuple(max(int(c // 2), 1)
+                            for c in plan.cluster.capacities))
+    kwargs = dict(now=100.0, done=[0], running=[(1, 25.0)],
+                  duration_scale={2: 1.5}, cluster=smaller)
+    legacy = ag.replan(plan, **kwargs)
+    via = ag.session().replan(plan, **kwargs)
+    np.testing.assert_array_equal(legacy.solution.option_idx,
+                                  via.plan.solution.option_idx)
+    np.testing.assert_array_equal(legacy.solution.start,
+                                  via.plan.solution.start)
+    np.testing.assert_array_equal(legacy.solution.finish,
+                                  via.plan.solution.finish)
+    assert legacy.solution.energy == via.plan.solution.energy
+    assert legacy.reference == via.plan.reference
+    assert tuple(via.plan.cluster.caps) == tuple(smaller.caps)
