@@ -11,6 +11,12 @@ shared-mode energy delta, the streaming deadline hit rates, and interpret-
 mode fused-kernel numbers are reported as advisory context — they gate
 inside the benchmarks themselves.
 
+A MISSING baseline artifact is its own loud failure (exit
+``MISSING_BASELINE = 4``, distinct from a regression's 1): the gate
+comparing nothing must never read as a pass.  CI falls back to the
+committed ``benchmarks/baselines/BENCH_*.json`` smoke baselines when no
+previous run's artifact exists (first run on a branch, expired retention).
+
   python benchmarks/compare_bench.py prev.json curr.json [--max-regression 1.3]
 """
 from __future__ import annotations
@@ -19,10 +25,21 @@ import argparse
 import json
 import sys
 
+# distinct exit code for an absent artifact, so CI can tell "the trend
+# gate had nothing to compare" from "the trend gate failed"
+MISSING_BASELINE = 4
 
-def load(path: str) -> dict:
-    with open(path) as f:
-        return json.load(f)
+
+def load(path: str, role: str = "artifact") -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        print(f"MISSING {role}: {path} does not exist — the trend gate has "
+              f"nothing to compare; point it at a previous run's artifact "
+              f"or a committed benchmarks/baselines/ file "
+              f"(exit {MISSING_BASELINE})")
+        raise SystemExit(MISSING_BASELINE) from None
 
 
 def compare(prev: dict, curr: dict, max_regression: float) -> int:
@@ -93,6 +110,16 @@ def compare(prev: dict, curr: dict, max_regression: float) -> int:
         print(f"bucket P={b} plan latency: warmup {pw:.2f}s -> {cw:.2f}s, "
               f"steady {ps * 1e3:.0f}ms -> {cs * 1e3:.0f}ms "
               f"(advisory; compile-once / serve-many gap)")
+    # planner-serving daemon: submit-to-plan latency + guaranteed hit rate
+    # (the zero-retrace / hit-rate / ablation gates run inside bench_daemon)
+    p_d, c_d = prev.get("daemon") or {}, curr.get("daemon") or {}
+    if p_d and c_d:
+        print(f"daemon submit-to-plan latency: "
+              f"p50 {p_d.get('p50_ms'):.0f}ms -> {c_d.get('p50_ms'):.0f}ms, "
+              f"p99 {p_d.get('p99_ms'):.0f}ms -> {c_d.get('p99_ms'):.0f}ms; "
+              f"guaranteed hit rate {p_d.get('hit_rate'):.2f} -> "
+              f"{c_d.get('hit_rate'):.2f} (advisory; daemon gates run "
+              f"inside the benchmark)")
     return status
 
 
@@ -103,7 +130,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-regression", type=float, default=1.3,
                     help="fail when prev/curr throughput exceeds this ratio")
     args = ap.parse_args(argv)
-    status = compare(load(args.prev), load(args.curr), args.max_regression)
+    status = compare(load(args.prev, role="baseline"),
+                     load(args.curr, role="current run"),
+                     args.max_regression)
     print("benchmark trend gate:", "PASS" if status == 0 else "FAIL")
     return status
 

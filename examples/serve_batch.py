@@ -7,7 +7,7 @@ import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from repro.launch.serve import serve
+from repro.launch.serve_model import serve
 
 
 def main():

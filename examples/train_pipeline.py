@@ -18,7 +18,7 @@ from repro.core.agora import Agora
 from repro.core.dag import DAG, Task, TaskOption
 from repro.core.objectives import Goal
 from repro.flow.executor import FlowConfig, FlowRunner
-from repro.launch.serve import serve
+from repro.launch.serve_model import serve
 from repro.launch.train import train
 
 

@@ -30,10 +30,12 @@ wrappers over a default session (see docs/api.md for the migration table).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import math
+import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
@@ -211,6 +213,14 @@ def check_goals(goals, n: int) -> Optional[list]:
     return goals
 
 
+def _batch_shape(problems: Sequence[FlatProblem]) -> Tuple[int, int]:
+    """The task-shape envelope (Jmax, Omax) a batch pads to — together
+    with the problem-axis bucket, the static JIT signature it compiles."""
+    jmax = max(p.num_tasks for p in problems)
+    omax = max(max(len(t.options) for t in p.tasks) for p in problems)
+    return jmax, omax
+
+
 def _normalize_request(req, i: int) -> PlanRequest:
     if isinstance(req, DAG):
         req = PlanRequest(dag=req)
@@ -270,6 +280,17 @@ class PlannerSession:
                               mesh_axes=mesh_axes)
         self.engine = resolve_engine(self.spec)
         self.stats = SessionStats()
+        # warmed signatures: (bucket, Jmax, Omax) triples this session has
+        # already traced — a batch landing inside one is served with zero
+        # re-tracing BY construction; the serving daemon routes on this
+        self.envelopes: Set[Tuple[int, int, int]] = set()
+        # pool safety: a session may be driven from several threads (the
+        # serving daemon's per-pool executors + its background warmup
+        # thread).  One reentrant lock serializes solve + stats accounting
+        # per session, so trace_count/cache_hits never tear and the
+        # cache-size-delta trace detection stays race-free.  Distinct
+        # sessions in a pool still solve concurrently.
+        self._lock = threading.RLock()
 
     # -- pinned-solver plumbing ----------------------------------------
 
@@ -362,20 +383,23 @@ class PlannerSession:
             bucket_p=bucket_p, mesh=self._planner_mesh(),
             solve_single=lambda p, r, g: self._solve_single(p, r, g, cluster))
 
-        n0 = self.engine.cache_size()
-        t0 = time.monotonic()
-        sols, joint_errors = self.engine.fn(batch)
-        dt = time.monotonic() - t0
-        traced = self.engine.cache_size() > n0
+        with self._lock:
+            n0 = self.engine.cache_size()
+            t0 = time.monotonic()
+            sols, joint_errors = self.engine.fn(batch)
+            dt = time.monotonic() - t0
+            traced = self.engine.cache_size() > n0
 
-        # a 2-axis planner mesh auto-buckets the problem axis up to its
-        # first axis (see vectorized_anneal_many); mirror that so the
-        # recorded bucket matches the signature actually compiled
-        mesh = batch.mesh
-        if mesh is not None:
-            bucket_p = max(int(bucket_p or 1), mesh.shape[mesh.axis_names[0]])
-        bucket = bucket_size(len(problems), bucket_p)
-        self._account(bucket, traced, dt, warming=warming)
+            # a 2-axis planner mesh auto-buckets the problem axis up to its
+            # first axis (see vectorized_anneal_many); mirror that so the
+            # recorded bucket matches the signature actually compiled
+            mesh = batch.mesh
+            if mesh is not None:
+                bucket_p = max(int(bucket_p or 1),
+                               mesh.shape[mesh.axis_names[0]])
+            bucket = bucket_size(len(problems), bucket_p)
+            self._account(bucket, traced, dt, warming=warming)
+            self.envelopes.add((bucket,) + _batch_shape(problems))
 
         plans = [Plan(p, s, g, cluster, r, joint_errors=joint_errors)
                  for p, s, r, g in zip(problems, sols, refs, goals)]
@@ -433,6 +457,50 @@ class PlannerSession:
             out[b] = res[0].solve_seconds
         return out
 
+    def warmup_async(self, template: Union[PlanRequest, DAG], *,
+                     buckets: Optional[Sequence[int]] = None,
+                     max_p: Optional[int] = None,
+                     executor=None) -> "concurrent.futures.Future":
+        """``warmup`` off the serving path: trace/compile in a background
+        thread (or on ``executor``) and return a ``Future`` resolving to
+        the same ``{bucket: wall_seconds}`` map.
+
+        The session lock serializes the background trace against live
+        ``plan`` calls, so a serving thread never observes a torn cache —
+        it either rides the freshly warmed entry or waits its turn.  This
+        is the hook the serving daemon's envelope auto-widening rides:
+        when a batch exits the warmed ``(bucket, Jmax, Omax)`` envelope,
+        the NEXT envelope is compiled here instead of on a tenant's
+        critical path."""
+        if executor is not None:
+            return executor.submit(self.warmup, template, buckets=buckets,
+                                   max_p=max_p)
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+
+        def _run():
+            try:
+                fut.set_result(self.warmup(template, buckets=buckets,
+                                           max_p=max_p))
+            except BaseException as e:  # noqa: BLE001 — surfaced via Future
+                fut.set_exception(e)
+
+        threading.Thread(target=_run, name="planner-warmup",
+                         daemon=True).start()
+        return fut
+
+    # -- envelope routing (what the serving daemon dispatches on) -------
+
+    def bucket_for(self, n: int) -> int:
+        """The power-of-two bucket a batch of ``n`` requests is served at
+        (without a mesh override; see ``_serve`` for the mesh case)."""
+        return bucket_size(n, self.bucket_p)
+
+    def is_warm(self, n: int, jmax: int, omax: int) -> bool:
+        """True when a batch of ``n`` requests padding to task shape
+        ``(jmax, omax)`` lands inside an already-traced signature — i.e.
+        serving it re-traces nothing, by construction."""
+        return (self.bucket_for(n), jmax, omax) in self.envelopes
+
     # -- one-shot joint planning (the legacy ``Agora.plan`` semantics) --
 
     def plan_joint(self, dags: Sequence[DAG],
@@ -450,12 +518,13 @@ class PlannerSession:
             ref = reference_point(problem, self.cluster)
         else:
             ref = _check_ref(ref, 0)
-        n0 = self._single_cache_size()
-        t0 = time.monotonic()
-        sol = self._solve_single(problem, ref, goal)
-        dt = time.monotonic() - t0
-        traced = self._single_cache_size() > n0
-        self._account(1, traced, dt)
+        with self._lock:
+            n0 = self._single_cache_size()
+            t0 = time.monotonic()
+            sol = self._solve_single(problem, ref, goal)
+            dt = time.monotonic() - t0
+            traced = self._single_cache_size() > n0
+            self._account(1, traced, dt)
         return PlanResult(Plan(problem, sol, goal, self.cluster, ref),
                           request=None, bucket=1, traced=traced,
                           solve_seconds=dt)
@@ -481,20 +550,23 @@ class PlannerSession:
                                  new_dags=new_dags, cluster=cluster,
                                  duration_scale=duration_scale)
         ref = reference_point(prob, cluster)
-        n0 = self._single_cache_size()
-        t0 = time.monotonic()
-        if self.solver == "anneal":
-            from repro.core.annealer import anneal
-            sol = anneal(prob, cluster, self.goal, self.anneal_cfg, ref)
-        else:
-            # mirrors the legacy replan exactly: ising has no incremental
-            # re-plan path, so it re-solves through the vectorized engine
-            from repro.core.vectorized import vectorized_anneal
-            sol = vectorized_anneal(prob, cluster, self.goal, self.vec_cfg,
-                                    ref, mesh=self._chains_mesh())
-        dt = time.monotonic() - t0
-        traced = self._single_cache_size() > n0
-        self._account(1, traced, dt, replan=True)
+        with self._lock:
+            n0 = self._single_cache_size()
+            t0 = time.monotonic()
+            if self.solver == "anneal":
+                from repro.core.annealer import anneal
+                sol = anneal(prob, cluster, self.goal, self.anneal_cfg, ref)
+            else:
+                # mirrors the legacy replan exactly: ising has no
+                # incremental re-plan path, so it re-solves through the
+                # vectorized engine
+                from repro.core.vectorized import vectorized_anneal
+                sol = vectorized_anneal(prob, cluster, self.goal,
+                                        self.vec_cfg, ref,
+                                        mesh=self._chains_mesh())
+            dt = time.monotonic() - t0
+            traced = self._single_cache_size() > n0
+            self._account(1, traced, dt, replan=True)
         return PlanResult(Plan(prob, sol, self.goal, cluster, ref),
                           request=None, bucket=1, traced=traced,
                           solve_seconds=dt)
@@ -529,7 +601,8 @@ class PlannerSession:
             fits = [o.duration for o in task.options
                     if np.all(np.asarray(o.demands) <= caps + 1e-9)]
             if not fits:
-                self.stats.rejected += 1
+                with self._lock:
+                    self.stats.rejected += 1
                 return AdmissionDecision(
                     False, f"task {j} ({task.name}) fits no configuration "
                            f"within capacity {caps.tolist()}",
@@ -540,10 +613,12 @@ class PlannerSession:
         release = np.maximum(np.asarray(problem.release, float), start)
         lb = float((release + cp).max()) if problem.num_tasks else start
         if math.isfinite(request.deadline) and lb > request.deadline + 1e-9:
-            self.stats.rejected += 1
+            with self._lock:
+                self.stats.rejected += 1
             return AdmissionDecision(
                 False, f"critical-path lower bound t={lb:.1f} overshoots "
                        f"deadline t={request.deadline:.1f}",
                 completion_lower_bound=lb)
-        self.stats.admitted += 1
+        with self._lock:
+            self.stats.admitted += 1
         return AdmissionDecision(True, completion_lower_bound=lb)

@@ -1,3 +1,5 @@
+from repro.flow.daemon import (DaemonConfig, DaemonStats, LoadShedError,
+                               PlannerHTTPServer, PlannerService, PoolSpec)
 from repro.flow.executor import (FlowConfig, FlowResult, FlowRunner,
                                  MultiTenantRunner, TenantRecord)
 from repro.flow.streaming import (SLA_BEST_EFFORT, SLA_CLASSES,
@@ -6,6 +8,8 @@ from repro.flow.streaming import (SLA_BEST_EFFORT, SLA_CLASSES,
                                   TenantRequest, deadline_hit_rate)
 
 __all__ = [
+    "DaemonConfig", "DaemonStats", "LoadShedError", "PlannerHTTPServer",
+    "PlannerService", "PoolSpec",
     "FlowConfig", "FlowResult", "FlowRunner", "MultiTenantRunner",
     "TenantRecord", "SLA_BEST_EFFORT", "SLA_CLASSES", "SLA_GUARANTEED",
     "SLA_STANDARD", "StreamConfig", "StreamingRunner", "StreamRecord",

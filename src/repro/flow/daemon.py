@@ -1,0 +1,703 @@
+"""Planner-serving daemon: the asyncio front door over warmed session pools.
+
+``PlannerSession`` (PR 5) made compile-once / serve-many a first-class
+object, but a single synchronous Python caller still drove one session at
+a time.  ``PlannerService`` turns it into a long-lived service:
+
+* **async submission** — ``await service.submit(request)`` resolves to a
+  typed ``PlanResult``; arrivals from many concurrent callers are
+  continuously batched so a burst of N submissions costs ONE device
+  dispatch, not N.
+* **deadline-aware flush** — a pending batch dispatches when it fills the
+  next warmed power-of-two bucket, OR when the earliest admitted
+  deadline's slack says wait no longer (the tenant's critical-path
+  completion floor + measured solve latency + a margin, subtracted from
+  its absolute deadline), OR when the oldest request has waited
+  ``max_wait_s``.  ``DaemonConfig(flush="fill")`` is the ablation that
+  only fills — the benchmark gate shows it strictly worse.
+* **warmed session pool** — one ``PlannerSession`` per ``PoolSpec``
+  (shared/isolated × bucket schedule × mesh), each warmed ahead of
+  traffic; requests route by explicit pool name or the config's router.
+  Solves run on per-pool executor threads so the event loop (and every
+  other pool) keeps serving while one pool's batch is on device.
+* **load shedding** — provably infeasible guaranteed arrivals are shed at
+  submission through ``session.admit`` (same provable-only rejections as
+  the streaming control plane), and a full queue sheds instead of growing
+  an unbounded backlog.  Shed submissions raise ``LoadShedError``.
+* **envelope auto-widening** — a batch that exits the warmed ``(bucket,
+  Jmax, Omax)`` envelope is served on the dedicated widen thread (the
+  trace happens OFF the per-pool serving executors, which keep serving
+  warm traffic), and the next bucket up is pre-warmed in the background
+  so sustained growth never pays the compile inline again.
+
+A thin JSON-over-HTTP adapter (``PlannerHTTPServer``) serves non-Python
+callers; ``python -m repro.launch.serve_planner`` is the CLI entry.
+(``repro.launch.serve`` is the *model*-serving demo, relocated to
+``repro.launch.serve_model``.)
+
+Clocks: deadlines, DAG release times and solver timelines share ONE
+"virtual" clock supplied by ``DaemonConfig.clock`` (defaults to
+``time.monotonic``, i.e. real time).  ``time_scale`` says how many
+virtual seconds pass per wall second, so benchmarks can replay hours of
+trace in seconds of wall time; production leaves both at the default.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import json
+import math
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro.core.dag import DAG, Task, TaskOption
+from repro.core.objectives import Goal
+from repro.core.session import (SLA_CLASSES, SLA_GUARANTEED, SLA_STANDARD,
+                                AdmissionDecision, PlanRequest, PlanResult,
+                                _normalize_request)
+
+__all__ = [
+    "PoolSpec", "DaemonConfig", "DaemonStats", "LoadShedError",
+    "PlannerService", "PlannerHTTPServer", "dag_to_json", "dag_from_json",
+    "plan_result_to_json", "request_from_json",
+]
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """One warmed-session flavor in the pool.
+
+    A pool entry pins one static solve signature (capacity model, bucket
+    schedule, mesh, default goal) exactly the way ``agora.session(...)``
+    does; the service owns one session + one serving thread per entry.
+    """
+    name: str
+    shared_capacity: bool = True
+    bucket_p: Union[int, bool] = True
+    mesh: Any = "inherit"              # "inherit" -> the Agora's mesh
+    goal: Optional[Goal] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DaemonConfig:
+    """Service knobs (see module docstring for the flush policy)."""
+    pools: Tuple[PoolSpec, ...] = (PoolSpec("shared"),)
+    max_batch: int = 8                 # bucket-fill flush target (= the
+    #                                    largest warmed bucket)
+    max_wait_s: float = 30.0           # flush a non-empty queue after this
+    #                                    long (virtual s) regardless
+    slack_margin_s: float = 10.0       # deadline-flush safety margin on top
+    #                                    of the completion floor (virtual s)
+    flush: str = "deadline"            # "deadline" | "fill" (the ablation:
+    #                                    ignore deadline slack, only fill /
+    #                                    max_wait flushes)
+    admission_control: bool = True     # shed provably infeasible guaranteed
+    #                                    arrivals at submission
+    max_queue: int = 64                # per-pool backlog ceiling (shed past)
+    auto_widen: bool = True            # pre-warm the next bucket after an
+    #                                    envelope exit, off the serving path
+    guaranteed_w: float = 0.9          # SLA->goal mapping for requests that
+    best_effort_w: float = 0.15        # carry no explicit goal (mirrors
+    deadline_weight: float = 8.0       # flow.streaming.sla_goal)
+    # virtual clock: deadlines / release times / solver timelines live on
+    # clock(); time_scale = virtual seconds per wall second
+    clock: Callable[[], float] = time.monotonic
+    time_scale: float = 1.0
+    router: Optional[Callable[[PlanRequest], str]] = None
+
+    def __post_init__(self):
+        assert self.flush in ("deadline", "fill"), self.flush
+        assert self.pools, "need at least one PoolSpec"
+        assert self.max_batch >= 1 and self.max_queue >= 1
+        names = [p.name for p in self.pools]
+        assert len(set(names)) == len(names), f"duplicate pool names {names}"
+
+
+class LoadShedError(RuntimeError):
+    """Raised by ``submit`` when a request is shed instead of planned:
+    either the pool's backlog is full, or admission control proved the
+    guaranteed deadline infeasible (``decision`` carries the proof)."""
+
+    def __init__(self, reason: str,
+                 decision: Optional[AdmissionDecision] = None):
+        super().__init__(reason)
+        self.reason = reason
+        self.decision = decision
+
+
+@dataclasses.dataclass
+class DaemonStats:
+    """Service-level counters (session-level stats ride each pool's
+    ``session.stats``; ``PlannerService.stats()`` aggregates both)."""
+    submitted: int = 0
+    served: int = 0
+    shed_queue: int = 0
+    shed_admission: int = 0
+    batches: int = 0
+    flush_fill: int = 0                # batches flushed on bucket fill
+    flush_deadline: int = 0            # ... on deadline slack expiry
+    flush_wait: int = 0                # ... on the max_wait timer
+    flush_drain: int = 0               # ... on shutdown drain
+    widen_events: int = 0              # batches that exited the warmed
+    #                                    envelope (served on the widen
+    #                                    thread, next bucket pre-warmed)
+    errors: int = 0                    # batches whose solve raised
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One queued submission awaiting its flush."""
+    request: PlanRequest
+    future: "asyncio.Future[PlanResult]"
+    submit_v: float                    # virtual submission time
+    submit_wall: float                 # wall submission time (latency acct)
+    cp_dur: float = 0.0                # critical-path completion floor
+    #                                    (duration, virtual s) — what the
+    #                                    deadline flush subtracts
+
+
+class _PoolEntry:
+    """Session + queue + serving thread for one ``PoolSpec``."""
+
+    def __init__(self, spec: PoolSpec, session):
+        self.spec = spec
+        self.session = session
+        self.pending: Deque[_Pending] = collections.deque()
+        self.event: Optional[asyncio.Event] = None   # created on start()
+        self.executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"planner-{spec.name}")
+        self.flusher: Optional[asyncio.Task] = None
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+
+class PlannerService:
+    """Async planner-serving daemon over a pool of warmed sessions
+    (see module docstring).
+
+    Lifecycle::
+
+        service = PlannerService(agora, DaemonConfig(...))
+        service.warmup(template_dag, max_p=8)     # compile ahead of traffic
+        async with service:                       # start() ... stop()
+            result = await service.submit(PlanRequest(dag=dag))
+    """
+
+    def __init__(self, agora, cfg: Optional[DaemonConfig] = None):
+        self.agora = agora
+        self.cfg = cfg or DaemonConfig()
+        self.entries: Dict[str, _PoolEntry] = {}
+        for spec in self.cfg.pools:
+            session = agora.session(
+                shared_capacity=spec.shared_capacity, bucket_p=spec.bucket_p,
+                mesh=spec.mesh, goal=spec.goal)
+            self.entries[spec.name] = _PoolEntry(spec, session)
+        self.default_pool = self.cfg.pools[0].name
+        self.stats_counters = DaemonStats()
+        self._latency_wall: List[float] = []   # submit -> plan, wall seconds
+        # one dedicated thread traces out-of-envelope signatures so the
+        # per-pool serving executors never stall behind a compile
+        self._widen_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="planner-widen")
+        self._dispatches: set = set()
+        self._running = False
+
+    # -- clock ---------------------------------------------------------
+
+    def _now(self) -> float:
+        return float(self.cfg.clock())
+
+    def _to_wall(self, virtual_delta: float) -> float:
+        return max(virtual_delta, 0.0) / self.cfg.time_scale
+
+    # -- warmup --------------------------------------------------------
+
+    def warmup(self, template: Union[PlanRequest, DAG], *,
+               buckets: Optional[Sequence[int]] = None,
+               max_p: Optional[int] = None,
+               pools: Optional[Sequence[str]] = None
+               ) -> Dict[str, Dict[int, float]]:
+        """Trace/compile every pool's bucket schedule ahead of traffic
+        (synchronous; call before ``start`` or from an executor).  Returns
+        ``{pool: {bucket: wall_seconds}}``."""
+        max_p = max_p if max_p is not None else self.cfg.max_batch
+        out: Dict[str, Dict[int, float]] = {}
+        for name in (pools or list(self.entries)):
+            out[name] = self.entries[name].session.warmup(
+                template, buckets=buckets, max_p=max_p)
+        return out
+
+    # -- lifecycle -----------------------------------------------------
+
+    async def start(self) -> "PlannerService":
+        assert not self._running, "service already started"
+        self._running = True
+        for entry in self.entries.values():
+            entry.event = asyncio.Event()
+            entry.flusher = asyncio.create_task(
+                self._flusher(entry), name=f"flusher-{entry.spec.name}")
+        return self
+
+    async def stop(self, *, drain: bool = True) -> None:
+        """Stop serving: drain (default) or shed the remaining backlog,
+        join the flushers and dispatches, release the executors."""
+        if not self._running:
+            return
+        self._running = False
+        for entry in self.entries.values():
+            if not drain:
+                while entry.pending:
+                    p = entry.pending.popleft()
+                    if not p.future.done():
+                        p.future.set_exception(
+                            LoadShedError("service shutting down"))
+            entry.event.set()
+        await asyncio.gather(*(e.flusher for e in self.entries.values()
+                               if e.flusher))
+        if self._dispatches:
+            await asyncio.gather(*list(self._dispatches),
+                                 return_exceptions=True)
+        for entry in self.entries.values():
+            entry.executor.shutdown(wait=True)
+        self._widen_pool.shutdown(wait=True)
+
+    async def __aenter__(self) -> "PlannerService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- submission ----------------------------------------------------
+
+    def _route(self, request: PlanRequest, pool: Optional[str]) -> _PoolEntry:
+        name = pool or (self.cfg.router(request) if self.cfg.router
+                        else self.default_pool)
+        if name not in self.entries:
+            raise ValueError(f"unknown pool {name!r} "
+                             f"(have {sorted(self.entries)})")
+        return self.entries[name]
+
+    async def submit(self, request: Union[PlanRequest, DAG], *,
+                     pool: Optional[str] = None) -> PlanResult:
+        """Submit one planning request; resolves to its ``PlanResult``
+        once the batch it rode in has been served.
+
+        Raises ``LoadShedError`` when the request is shed (full queue, or
+        admission control proved the guaranteed deadline infeasible) and
+        ``ValueError`` on a malformed request."""
+        if not self._running:
+            raise RuntimeError("PlannerService is not running "
+                               "(use 'async with service:' or await start())")
+        request = _normalize_request(request, 0)
+        entry = self._route(request, pool)
+        self.stats_counters.submitted += 1
+        if len(entry.pending) >= self.cfg.max_queue:
+            self.stats_counters.shed_queue += 1
+            raise LoadShedError(
+                f"pool {entry.spec.name!r}: backlog full "
+                f"({len(entry.pending)} >= {self.cfg.max_queue})")
+        now_v = self._now()
+        cp_dur = 0.0
+        if math.isfinite(request.deadline):
+            # the same provable floor admission uses: release-aware
+            # critical path of best-case durations against the full pool.
+            # Off the loop thread: admit touches the session lock, which a
+            # solve in flight can hold for the whole device dispatch
+            decision = await asyncio.get_running_loop().run_in_executor(
+                None, lambda: entry.session.admit(request, now=now_v))
+            cp_dur = max(decision.completion_lower_bound - now_v, 0.0)
+            if not math.isfinite(cp_dur):
+                cp_dur = 0.0           # structurally doomed; don't let an
+                #                        inf floor force an instant flush
+            if (self.cfg.admission_control and not decision.admitted
+                    and request.sla == SLA_GUARANTEED):
+                self.stats_counters.shed_admission += 1
+                raise LoadShedError(
+                    f"admission: {decision.reason}", decision)
+        fut = asyncio.get_running_loop().create_future()
+        entry.pending.append(_Pending(request, fut, now_v, time.monotonic(),
+                                      cp_dur))
+        entry.event.set()
+        return await fut
+
+    # -- flush policy --------------------------------------------------
+
+    def _solve_estimate_v(self, entry: _PoolEntry, n: int) -> float:
+        """Expected solve wall time for a batch of ``n``, in virtual
+        seconds — the warmed bucket's measured steady latency when known,
+        its warmup latency otherwise (an unwarmed flush will trace)."""
+        bs = entry.session.stats.buckets.get(entry.session.bucket_for(n))
+        for secs in ((bs.steady_seconds, bs.warmup_seconds) if bs else ()):
+            if math.isfinite(secs):
+                return secs * self.cfg.time_scale
+        return 0.0
+
+    def _flush_at(self, entry: _PoolEntry) -> Tuple[float, str]:
+        """(virtual flush time, cause) for the current backlog — the
+        earliest of the max-wait timer and (in "deadline" mode) the
+        tightest admitted deadline's dispatch-by time."""
+        cfg = self.cfg
+        cands = [(entry.pending[0].submit_v + cfg.max_wait_s, "wait")]
+        if cfg.flush == "deadline":
+            est = self._solve_estimate_v(entry, len(entry.pending))
+            for p in entry.pending:
+                if math.isfinite(p.request.deadline):
+                    cands.append((p.request.deadline - p.cp_dur - est
+                                  - cfg.slack_margin_s, "deadline"))
+        return min(cands)
+
+    async def _flusher(self, entry: _PoolEntry) -> None:
+        # a dead flusher must not strand its queue: fail the pending
+        # futures loudly, then re-raise so stop() surfaces the bug
+        try:
+            await self._flusher_loop(entry)
+        except BaseException as exc:
+            while entry.pending:
+                p = entry.pending.popleft()
+                if not p.future.done():
+                    p.future.set_exception(
+                        RuntimeError(f"pool {entry.spec.name!r} flusher "
+                                     f"died: {exc!r}"))
+            raise
+
+    async def _flusher_loop(self, entry: _PoolEntry) -> None:
+        cfg = self.cfg
+        while True:
+            if not entry.pending:
+                entry.event.clear()
+                if not self._running:
+                    return
+                await entry.event.wait()
+                continue
+            if len(entry.pending) >= cfg.max_batch:
+                self._flush(entry, "fill")
+                continue
+            if not self._running:
+                self._flush(entry, "drain")
+                continue
+            flush_at, cause = self._flush_at(entry)
+            now_v = self._now()
+            if now_v >= flush_at:
+                self._flush(entry, cause)
+                continue
+            # sleep until the flush moment, but wake on any new submission
+            # (it may fill the bucket or bring a tighter deadline)
+            entry.event.clear()
+            try:
+                await asyncio.wait_for(entry.event.wait(),
+                                       self._to_wall(flush_at - now_v))
+            except asyncio.TimeoutError:
+                pass
+
+    def _flush(self, entry: _PoolEntry, cause: str) -> None:
+        batch = [entry.pending.popleft()
+                 for _ in range(min(len(entry.pending), self.cfg.max_batch))]
+        setattr(self.stats_counters, f"flush_{cause}",
+                getattr(self.stats_counters, f"flush_{cause}") + 1)
+        self.stats_counters.batches += 1
+        task = asyncio.create_task(
+            self._dispatch(entry, batch),
+            name=f"dispatch-{entry.spec.name}-{self.stats_counters.batches}")
+        self._dispatches.add(task)
+        task.add_done_callback(self._dispatches.discard)
+
+    # -- dispatch ------------------------------------------------------
+
+    def _goal_for(self, request: PlanRequest, now_v: float) -> Optional[Goal]:
+        """SLA class -> per-tenant goal for requests that carry none
+        (mirrors ``flow.streaming.sla_goal``); deadlines are absolute on
+        the service clock, the solver plans relative to the dispatch."""
+        if request.goal is not None or request.sla == SLA_STANDARD:
+            return request.goal
+        base = self.agora.goal
+        if request.sla == SLA_GUARANTEED:
+            return dataclasses.replace(
+                base, w=self.cfg.guaranteed_w,
+                deadline=max(request.deadline - now_v, 1e-6),
+                deadline_weight=self.cfg.deadline_weight)
+        return dataclasses.replace(base, w=self.cfg.best_effort_w)
+
+    @staticmethod
+    def _batch_envelope(requests: Sequence[PlanRequest]) -> Tuple[int, int]:
+        jmax = max(sum(d.num_tasks for d in r.dags) for r in requests)
+        omax = max(len(t.options) for r in requests
+                   for d in r.dags for t in d.tasks)
+        return jmax, omax
+
+    async def _dispatch(self, entry: _PoolEntry,
+                        batch: List[_Pending]) -> None:
+        now_v = self._now()
+        requests = [
+            dataclasses.replace(p.request, goal=self._goal_for(p.request,
+                                                               now_v))
+            if p.request.goal is None else p.request
+            for p in batch]
+        jmax, omax = self._batch_envelope(requests)
+        warm = entry.session.is_warm(len(requests), jmax, omax)
+        executor = entry.executor
+        if not warm:
+            # envelope exit: trace on the widen thread so this pool's
+            # serving executor keeps flowing warm batches, and pre-warm
+            # the NEXT bucket so sustained growth stays ahead of traffic
+            self.stats_counters.widen_events += 1
+            executor = self._widen_pool
+        loop = asyncio.get_running_loop()
+        try:
+            results = await loop.run_in_executor(
+                executor, lambda: entry.session.plan(requests))
+        except Exception as exc:  # noqa: BLE001 — surfaced per future
+            self.stats_counters.errors += 1
+            for p in batch:
+                if not p.future.done():
+                    p.future.set_exception(exc)
+            return
+        wall = time.monotonic()
+        for p, res in zip(batch, results):
+            self._latency_wall.append(wall - p.submit_wall)
+            if not p.future.done():
+                p.future.set_result(res)
+        self.stats_counters.served += len(batch)
+        if not warm and self.cfg.auto_widen and self._running:
+            self._pre_warm_next(entry, requests, jmax, omax)
+
+    def _pre_warm_next(self, entry: _PoolEntry,
+                       requests: Sequence[PlanRequest],
+                       jmax: int, omax: int) -> None:
+        """Background-compile the next bucket up at this batch's shape —
+        only meaningful when a single request reproduces the envelope
+        (heterogeneous shapes can't be warmed from one template)."""
+        nxt = entry.session.bucket_for(len(requests)) << 1
+        for r in requests:
+            if (sum(d.num_tasks for d in r.dags) == jmax
+                    and max(len(t.options) for d in r.dags
+                            for t in d.tasks) == omax):
+                entry.session.warmup_async(
+                    dataclasses.replace(r, goal=None),
+                    buckets=[nxt], executor=self._widen_pool)
+                return
+
+    # -- observability -------------------------------------------------
+
+    def latency_percentiles(self,
+                            qs: Sequence[float] = (50.0, 99.0)
+                            ) -> Dict[str, float]:
+        """Submit-to-plan WALL latency percentiles, seconds."""
+        if not self._latency_wall:
+            return {f"p{q:g}": math.nan for q in qs}
+        arr = np.asarray(self._latency_wall)
+        return {f"p{q:g}": float(np.percentile(arr, q)) for q in qs}
+
+    def stats(self) -> Dict[str, Any]:
+        """One aggregated snapshot: daemon counters, wall-latency
+        percentiles, and every pool session's zero-retrace evidence."""
+        pools = {}
+        trace_count = cache_hits = warmups = 0
+        for name, entry in self.entries.items():
+            st = entry.session.stats
+            trace_count += st.trace_count
+            cache_hits += st.cache_hits
+            warmups += st.warmups
+            pools[name] = {
+                "trace_count": st.trace_count,
+                "cache_hits": st.cache_hits,
+                "plans": st.plans,
+                "warmups": st.warmups,
+                "pending": len(entry.pending),
+                "envelopes": sorted(entry.session.envelopes),
+                "buckets": {
+                    str(b): {"plans": bs.plans, "traces": bs.traces,
+                             "cache_hits": bs.cache_hits,
+                             "warmup_s": bs.warmup_seconds,
+                             "steady_s": bs.steady_seconds}
+                    for b, bs in sorted(st.buckets.items())},
+            }
+        return {
+            "running": self._running,
+            "trace_count": trace_count,
+            "cache_hits": cache_hits,
+            "warmups": warmups,
+            "latency": self.latency_percentiles(),
+            **dataclasses.asdict(self.stats_counters),
+            "pools": pools,
+        }
+
+
+# ---------------------------------------------------------------------------
+# JSON wire format (the non-Python adapter's schema)
+# ---------------------------------------------------------------------------
+
+
+def dag_to_json(dag: DAG) -> dict:
+    return {
+        "name": dag.name,
+        "release_time": dag.release_time,
+        "tasks": [{
+            "name": t.name,
+            "default_option": t.default_option,
+            "options": [{"label": o.label, "duration": o.duration,
+                         "demands": list(o.demands), "cost": o.cost}
+                        for o in t.options],
+        } for t in dag.tasks],
+        "edges": [[a, b] for a, b in dag.edges],
+    }
+
+
+def dag_from_json(obj: dict) -> DAG:
+    tasks = [Task(t["name"],
+                  [TaskOption(o["label"], float(o["duration"]),
+                              tuple(float(d) for d in o["demands"]),
+                              float(o["cost"]))
+                   for o in t["options"]],
+                  default_option=int(t.get("default_option", 0)))
+             for t in obj["tasks"]]
+    edges = [(int(a), int(b)) for a, b in obj.get("edges", [])]
+    return DAG(obj["name"], tasks, edges,
+               release_time=float(obj.get("release_time", 0.0)))
+
+
+def request_from_json(obj: dict) -> PlanRequest:
+    if "dags" in obj:
+        dag = tuple(dag_from_json(d) for d in obj["dags"])
+    else:
+        dag = dag_from_json(obj["dag"])
+    deadline = obj.get("deadline")
+    sla = obj.get("sla", SLA_STANDARD)
+    if sla not in SLA_CLASSES:
+        raise ValueError(f"unknown SLA class {sla!r}")
+    return PlanRequest(dag=dag, sla=sla,
+                       deadline=math.inf if deadline is None
+                       else float(deadline))
+
+
+def plan_result_to_json(res: PlanResult) -> dict:
+    sol = res.plan.solution
+    prob = res.plan.problem
+    return {
+        "request": res.request.name if res.request else None,
+        "bucket": res.bucket,
+        "traced": bool(res.traced),
+        "solve_seconds": res.solve_seconds,
+        "makespan": float(res.makespan),
+        "cost": float(res.cost),
+        "tasks": [t.name for t in prob.tasks],
+        "option_idx": np.asarray(sol.option_idx).tolist(),
+        "option_labels": [t.options[int(o)].label for t, o in
+                          zip(prob.tasks, np.asarray(sol.option_idx))],
+        "start": np.asarray(sol.start, float).tolist(),
+        "finish": np.asarray(sol.finish, float).tolist(),
+        "errors": res.plan.validate(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Thin JSON-over-HTTP adapter
+# ---------------------------------------------------------------------------
+
+
+class PlannerHTTPServer:
+    """Minimal HTTP/1.1 front for ``PlannerService`` (stdlib-only; one
+    request per connection).
+
+    * ``POST /v1/plan``  — body ``{"dag": {...}}`` (or ``"dags"``), plus
+      optional ``"sla"``, ``"deadline"``, ``"pool"``; 200 with the plan
+      JSON, 429 when shed, 400 on malformed input.
+    * ``GET /v1/stats``  — the aggregated ``PlannerService.stats()``.
+    * ``GET /healthz``   — liveness.
+    """
+
+    def __init__(self, service: PlannerService, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.service = service
+        self.host = host
+        self.port = port
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> Tuple[str, int]:
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self.host, self.port
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    # ------------------------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            status, payload = await self._respond(reader)
+        except Exception as exc:  # noqa: BLE001 — wire errors -> 500
+            status, payload = 500, {"error": str(exc)}
+        body = json.dumps(payload).encode()
+        reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                  429: "Too Many Requests", 500: "Internal Server Error",
+                  503: "Service Unavailable"}.get(status, "OK")
+        writer.write(
+            f"HTTP/1.1 {status} {reason}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n".encode() + body)
+        try:
+            await writer.drain()
+        finally:
+            writer.close()
+
+    async def _respond(self, reader: asyncio.StreamReader
+                       ) -> Tuple[int, dict]:
+        request_line = (await reader.readline()).decode("latin-1").strip()
+        if not request_line:
+            return 400, {"error": "empty request"}
+        try:
+            method, path, _ = request_line.split(" ", 2)
+        except ValueError:
+            return 400, {"error": f"malformed request line {request_line!r}"}
+        headers: Dict[str, str] = {}
+        while True:
+            line = (await reader.readline()).decode("latin-1").strip()
+            if not line:
+                break
+            key, _, value = line.partition(":")
+            headers[key.strip().lower()] = value.strip()
+        body = b""
+        length = int(headers.get("content-length", 0) or 0)
+        if length:
+            body = await reader.readexactly(length)
+
+        if method == "GET" and path == "/healthz":
+            return 200, {"ok": True, "running": self.service._running}
+        if method == "GET" and path == "/v1/stats":
+            return 200, self.service.stats()
+        if method == "POST" and path == "/v1/plan":
+            if not self.service._running:
+                return 503, {"error": "service not running"}
+            try:
+                obj = json.loads(body or b"{}")
+                request = request_from_json(obj)
+            except (ValueError, KeyError, TypeError) as exc:
+                return 400, {"error": f"malformed request: {exc}"}
+            try:
+                result = await self.service.submit(request,
+                                                   pool=obj.get("pool"))
+            except LoadShedError as exc:
+                return 429, {"error": str(exc), "shed": True}
+            except ValueError as exc:
+                return 400, {"error": str(exc)}
+            return 200, plan_result_to_json(result)
+        return 404, {"error": f"no route {method} {path}"}

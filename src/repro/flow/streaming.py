@@ -106,6 +106,12 @@ class StreamConfig:
     # instead of best-effort missed; the decision rides StreamRecord
     admission_control: bool = True
     admission: str = "reject"          # "reject" | "downgrade"
+    # monotonic clock progress per (tenant, round): every re-enqueue —
+    # invalid-plan backoff or preemption — moves the tenant's ready_at
+    # forward by at least this much, so a tenant with no in-flight residue
+    # to wait for (``_next_release`` infinite) burns its retry budget at
+    # DISTINCT clock times instead of back-to-back rounds at one instant
+    min_requeue_delta: float = 1.0
 
 
 def sla_goal(req: TenantRequest, base: Goal, now: float,
@@ -230,7 +236,8 @@ class StreamingRunner(MultiTenantRunner):
         if cfg.retry_backoff <= 0:
             cfg = dataclasses.replace(cfg,
                                       retry_backoff=self.stream.preempt_backoff)
-        return max(_backoff_delay(cfg, state.preemptions), 1e-6)
+        return max(_backoff_delay(cfg, state.preemptions),
+                   self.stream.min_requeue_delta)
 
     def _plan_batch(self, clock: float, batch: List[_TenantState],
                     caps_round: Optional[np.ndarray] = None):
@@ -411,9 +418,14 @@ class StreamingRunner(MultiTenantRunner):
                             continue
                         # backoff floored at the next residue release:
                         # retrying an invalid plan against the same free
-                        # sliver cannot succeed
+                        # sliver cannot succeed.  The floor is
+                        # min_requeue_delta, NOT an epsilon: with no
+                        # residue in flight (release infinite) an epsilon
+                        # floor re-admitted the tenant at effectively the
+                        # same clock and drained max_retries in one instant
                         delay = max(
-                            _backoff_delay(self.cfg, s.plan_retries), 1e-6)
+                            _backoff_delay(self.cfg, s.plan_retries),
+                            sc.min_requeue_delta)
                         release = self._next_release(clock)
                         ready = max(
                             clock + delay,

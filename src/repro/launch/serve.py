@@ -1,87 +1,24 @@
-"""Batched serving driver: prefill a prompt batch, then decode with the
-explicit KV/state cache. CPU runs reduced configs; the dry-run exercises the
-full-size serve_step on the production meshes.
+"""Deprecation shim: the model-serving demo moved to
+``repro.launch.serve_model`` (the ``serve`` name was reserved for the
+planner front door — see ``repro.flow.daemon`` and
+``repro.launch.serve_planner``).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --tokens 32
+``python -m repro.launch.serve ...`` still works, with a warning.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.serve_model import main, serve  # noqa: F401
 
-from repro.configs import ARCH_IDS, get_config
-from repro.launch.mesh import make_mesh_for
-from repro.models.transformer import Model
-
-
-def serve(arch: str = "smollm-360m", smoke: bool = True, batch: int = 4,
-          prompt_len: int = 16, gen_tokens: int = 32, seed: int = 0,
-          temperature: float = 0.0, mesh=None, params=None, quiet: bool = False):
-    cfg = get_config(arch, smoke=smoke)
-    mesh = mesh or make_mesh_for(len(jax.devices()), 1)
-    model = Model(cfg, mesh=mesh)
-    if params is None:
-        params = model.init(seed=seed)
-    S_max = prompt_len + gen_tokens
-    cache, _ = model.init_cache(batch, S_max)
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-
-    rng = np.random.default_rng(seed)
-    if cfg.embedding_inputs:
-        prompt = rng.normal(size=(batch, prompt_len, cfg.d_model)).astype(np.float32) * 0.02
-        feed = lambda t: {"embeds": jnp.asarray(prompt[:, t:t + 1])}
-    else:
-        prompt = rng.integers(0, cfg.vocab_size, size=(batch, prompt_len))
-        feed = lambda t: {"tokens": jnp.asarray(prompt[:, t:t + 1], jnp.int32)}
-
-    # prefill via repeated decode (keeps one compiled step; production would
-    # use a fused prefill kernel — see launch/steps.make_prefill_step)
-    t0 = time.monotonic()
-    logits = None
-    for t in range(prompt_len):
-        logits, cache = decode(params, cache, feed(t), t)
-    key = jax.random.PRNGKey(seed)
-    out_tokens = []
-    for t in range(prompt_len, S_max):
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, logits[:, 0] / temperature)
-        else:
-            nxt = jnp.argmax(logits[:, 0], axis=-1)
-        out_tokens.append(np.asarray(nxt))
-        if cfg.embedding_inputs:
-            # audio stub: feed the embedding of the sampled codec token id
-            emb = jnp.take(jax.random.normal(jax.random.PRNGKey(7),
-                                             (cfg.vocab_size, cfg.d_model)) * 0.02,
-                           nxt, axis=0)[:, None]
-            batch_in = {"embeds": emb}
-        else:
-            batch_in = {"tokens": nxt[:, None].astype(jnp.int32)}
-        logits, cache = decode(params, cache, batch_in, t)
-    dt = time.monotonic() - t0
-    toks = np.stack(out_tokens, 1)
-    if not quiet:
-        print(f"{arch}: generated {batch}x{gen_tokens} tokens in {dt:.2f}s "
-              f"({batch * (S_max) / dt:.1f} tok/s incl. prefill)")
-        print("sample:", toks[0][:16])
-    return {"tokens": toks, "seconds": dt}
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-    serve(arch=args.arch, batch=args.batch, prompt_len=args.prompt_len,
-          gen_tokens=args.tokens, temperature=args.temperature)
-
+# NOTE: a plain DeprecationWarning on purpose — CI's no-internal-callers
+# gate errors only on repro.core.session.PlannerDeprecationWarning, and
+# this shim is a user-facing rename, not a planner-API migration.
+warnings.warn(
+    "repro.launch.serve moved to repro.launch.serve_model; the planner "
+    "serving daemon lives in repro.flow.daemon (CLI: "
+    "python -m repro.launch.serve_planner)",
+    DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,275 @@
+"""Planner-serving daemon invariants (``repro.flow.daemon``).
+
+The service-level contract over ``PlannerSession`` pools: concurrent
+submissions batch into one device dispatch, the deadline-aware flush
+dispatches before an admitted deadline's slack runs out (and strictly
+earlier than the max-wait timer), warmed envelopes serve with zero
+re-tracing across the pool, shedding is loud (full queue + provably
+infeasible guaranteed deadlines), envelope exits are served on the widen
+path, and the JSON-over-HTTP adapter round-trips a plan.
+
+Tests drive the real asyncio service with ``asyncio.run`` (no event-loop
+plugin needed); all DAGs share one task shape so every test after the
+first rides the warm JIT cache.
+"""
+import asyncio
+import json
+import math
+
+import pytest
+
+from repro.cluster.catalog import Cluster, InstanceType
+from repro.core.agora import Agora
+from repro.core.dag import DAG, Task, TaskOption
+from repro.core.objectives import Goal
+from repro.core.session import (SLA_BEST_EFFORT, SLA_GUARANTEED,
+                                PlanRequest, PlanResult)
+from repro.core.vectorized import VecConfig
+from repro.flow.daemon import (DaemonConfig, LoadShedError, PlannerHTTPServer,
+                               PlannerService, PoolSpec, dag_from_json,
+                               dag_to_json, request_from_json)
+
+CFG = VecConfig(chains=8, iters=40, grid=64, seed=0)
+
+
+def _cluster(caps=(4.0,)):
+    return Cluster(tuple(InstanceType(f"r{m}", 1, 1, 3.6)
+                         for m in range(len(caps))), tuple(caps))
+
+
+def _agora(cluster):
+    return Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                 vec_cfg=CFG)
+
+
+def _chain_dag(name, n=2, dur=2.0, dem=1.0, price=3.6):
+    tasks = [Task(f"t{i}", [TaskOption("o", dur, (dem,), dur * dem * price)])
+             for i in range(n)]
+    return DAG(name, tasks, [(i, i + 1) for i in range(n - 1)])
+
+
+def _service(cluster=None, **kw):
+    cluster = cluster or _cluster()
+    kw.setdefault("pools", (PoolSpec("shared", shared_capacity=True,
+                                     bucket_p=True),))
+    kw.setdefault("max_batch", 2)
+    return PlannerService(_agora(cluster), DaemonConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# batching + zero re-trace over the warmed pool
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_submissions_batch_into_one_dispatch():
+    """Two concurrent arrivals fill the bucket and ride ONE device
+    dispatch — and inside the warmed envelope nothing re-traces."""
+    svc = _service(max_wait_s=30.0)
+    svc.warmup(_chain_dag("tmpl"), max_p=2)
+    trace0 = svc.stats()["trace_count"]
+
+    async def drive():
+        async with svc:
+            return await asyncio.gather(
+                svc.submit(PlanRequest(dag=_chain_dag("a"))),
+                svc.submit(PlanRequest(dag=_chain_dag("b"))))
+
+    res = asyncio.run(drive())
+    assert all(isinstance(r, PlanResult) for r in res)
+    assert [r.request.name for r in res] == ["a", "b"]
+    assert all(r.validate() == [] for r in res)
+    st = svc.stats()
+    assert st["served"] == 2 and st["batches"] == 1
+    assert st["flush_fill"] == 1
+    # the zero-retrace contract, aggregated over the pool
+    assert st["trace_count"] == trace0
+    assert all(not r.traced for r in res)
+    assert math.isfinite(st["latency"]["p99"])
+
+
+def test_deadline_flush_dispatches_before_max_wait():
+    """A lone guaranteed arrival can't fill the bucket; the deadline term
+    flushes it when its slack (deadline - completion floor - margin) runs
+    out — long before the max-wait timer would."""
+    svc = _service(max_wait_s=30.0, slack_margin_s=1.0)
+    svc.warmup(_chain_dag("tmpl"), max_p=2)
+
+    async def drive():
+        async with svc:
+            now = svc.cfg.clock()
+            # cp floor = 2 x 2.0s chain = 4.0; slack beyond floor+margin
+            # is ~1.5 virtual s, so the flush fires in ~1s wall
+            return await svc.submit(PlanRequest(
+                dag=_chain_dag("g"), sla=SLA_GUARANTEED, deadline=now + 6.5))
+
+    res = asyncio.run(drive())
+    assert res.validate() == []
+    st = svc.stats()
+    assert st["flush_deadline"] == 1 and st["flush_wait"] == 0
+    assert st["latency"]["p99"] < 10.0      # nowhere near max_wait_s
+
+
+def test_sla_goal_defaults_applied_per_class():
+    """Requests without an explicit goal get the SLA-mapped default: the
+    guaranteed class carries the deadline hinge, best effort leans cost."""
+    svc = _service(max_wait_s=0.2)
+    svc.warmup(_chain_dag("tmpl"), max_p=2)
+
+    async def drive():
+        async with svc:
+            now = svc.cfg.clock()
+            return await asyncio.gather(
+                svc.submit(PlanRequest(dag=_chain_dag("g"),
+                                       sla=SLA_GUARANTEED,
+                                       deadline=now + 100.0)),
+                svc.submit(PlanRequest(dag=_chain_dag("be"),
+                                       sla=SLA_BEST_EFFORT)))
+
+    g, be = asyncio.run(drive())
+    assert g.plan.goal.deadline_weight == svc.cfg.deadline_weight
+    assert g.plan.goal.w == svc.cfg.guaranteed_w
+    assert math.isfinite(g.plan.goal.deadline)
+    assert be.plan.goal.w == svc.cfg.best_effort_w
+
+
+# ---------------------------------------------------------------------------
+# load shedding
+# ---------------------------------------------------------------------------
+
+
+def test_full_queue_sheds_loudly():
+    svc = _service(max_batch=4, max_queue=1, max_wait_s=30.0, flush="fill")
+    svc.warmup(_chain_dag("tmpl"), max_p=4)
+
+    async def drive():
+        async with svc:
+            first = asyncio.create_task(
+                svc.submit(PlanRequest(dag=_chain_dag("a"))))
+            await asyncio.sleep(0.05)        # let it enqueue
+            with pytest.raises(LoadShedError) as ei:
+                await svc.submit(PlanRequest(dag=_chain_dag("b")))
+            assert "backlog full" in str(ei.value)
+            return first                     # drained at stop()
+    first = asyncio.run(drive())
+    assert isinstance(first.result(), PlanResult)
+    st = svc.stats()
+    assert st["shed_queue"] == 1 and st["served"] == 1
+    assert st["flush_drain"] == 1
+
+
+def test_infeasible_guaranteed_deadline_sheds_at_admission():
+    """session.admit's provable rejection surfaces as a LoadShedError
+    carrying the decision — the daemon never queues a doomed tenant."""
+    svc = _service()
+    svc.warmup(_chain_dag("tmpl"), max_p=2)
+
+    async def drive():
+        async with svc:
+            now = svc.cfg.clock()
+            with pytest.raises(LoadShedError) as ei:
+                # 4.0s critical path vs 1.0s of slack: provably infeasible
+                await svc.submit(PlanRequest(
+                    dag=_chain_dag("doomed"), sla=SLA_GUARANTEED,
+                    deadline=now + 1.0))
+            return ei.value
+
+    err = asyncio.run(drive())
+    assert err.decision is not None and not err.decision.admitted
+    assert "admission" in err.reason
+    st = svc.stats()
+    assert st["shed_admission"] == 1 and st["served"] == 0
+
+
+# ---------------------------------------------------------------------------
+# envelope exits: widen path + background auto-widening hook
+# ---------------------------------------------------------------------------
+
+
+def test_envelope_exit_served_on_widen_path():
+    """A batch outside the warmed (bucket, Jmax, Omax) envelope still
+    serves (tracing once, on the widen executor) and is counted."""
+    svc = _service(auto_widen=False, max_wait_s=0.2)
+    svc.warmup(_chain_dag("tmpl", n=2), max_p=2)
+
+    async def drive():
+        async with svc:
+            return await svc.submit(PlanRequest(dag=_chain_dag("big", n=3)))
+
+    res = asyncio.run(drive())
+    assert res.validate() == [] and res.traced
+    st = svc.stats()
+    assert st["widen_events"] == 1 and st["served"] == 1
+
+
+def test_warmup_async_traces_off_thread():
+    """The session-level background warmup hook the daemon's auto-widening
+    rides: the Future resolves to the {bucket: seconds} map and the traced
+    envelope becomes routable."""
+    sess = _agora(_cluster()).session(shared_capacity=True, bucket_p=True)
+    fut = sess.warmup_async(_chain_dag("tmpl"), buckets=[2])
+    out = fut.result(timeout=300)
+    assert set(out) == {2}
+    assert sess.is_warm(2, 2, 1)
+    assert (2, 2, 1) in sess.envelopes
+
+
+# ---------------------------------------------------------------------------
+# JSON wire format + HTTP adapter
+# ---------------------------------------------------------------------------
+
+
+def test_dag_json_roundtrip():
+    dag = _chain_dag("rt", n=3)
+    dag.release_time = 5.0
+    back = dag_from_json(json.loads(json.dumps(dag_to_json(dag))))
+    assert back.name == dag.name and back.release_time == 5.0
+    assert len(back.tasks) == 3 and back.edges == dag.edges
+    assert back.tasks[0].options[0].duration == 2.0
+    req = request_from_json({"dag": dag_to_json(dag), "sla": "guaranteed",
+                             "deadline": 50.0})
+    assert req.sla == SLA_GUARANTEED and req.deadline == 50.0
+    with pytest.raises(ValueError):
+        request_from_json({"dag": dag_to_json(dag), "sla": "platinum"})
+
+
+async def _http(host, port, method, path, body=None):
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = json.dumps(body).encode() if body is not None else b""
+    writer.write(f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
+                 f"Content-Length: {len(payload)}\r\n\r\n".encode() + payload)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, data = raw.partition(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    return status, json.loads(data)
+
+
+def test_http_adapter_end_to_end():
+    svc = _service(max_wait_s=0.2)
+    svc.warmup(_chain_dag("tmpl"), max_p=2)
+
+    async def drive():
+        http = PlannerHTTPServer(svc)
+        async with svc:
+            host, port = await http.start()
+            ok = await _http(host, port, "GET", "/healthz")
+            plan = await _http(host, port, "POST", "/v1/plan",
+                               {"dag": dag_to_json(_chain_dag("wire"))})
+            bad = await _http(host, port, "POST", "/v1/plan",
+                              {"dag": {"oops": True}})
+            stats = await _http(host, port, "GET", "/v1/stats")
+            lost = await _http(host, port, "GET", "/nope")
+            await http.stop()
+            return ok, plan, bad, stats, lost
+
+    ok, plan, bad, stats, lost = asyncio.run(drive())
+    assert ok == (200, {"ok": True, "running": True})
+    assert plan[0] == 200
+    assert plan[1]["errors"] == [] and plan[1]["makespan"] > 0
+    assert plan[1]["tasks"] == ["t0", "t1"]
+    assert len(plan[1]["option_labels"]) == 2
+    assert bad[0] == 400 and "malformed" in bad[1]["error"]
+    assert stats[0] == 200 and stats[1]["served"] == 1
+    assert "shared" in stats[1]["pools"]
+    assert lost[0] == 404

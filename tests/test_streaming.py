@@ -366,3 +366,116 @@ def test_admission_leaves_feasible_guaranteed_untouched():
     assert deadline_hit_rate(records) == 1.0
     assert runner.session.stats.admitted >= 1
     assert runner.session.stats.rejected == 0
+
+
+# ---------------------------------------------------------------------------
+# re-enqueue clock progress + record accounting
+# ---------------------------------------------------------------------------
+
+
+def _round_clocks(events, name):
+    """Clock instants at which ``name`` burned a planning attempt: its
+    re-enqueue events plus the final drop event."""
+    import re
+    out = []
+    for e in events:
+        if f"tenant {name}" in e and ("re-enqueued" in e or "dropped" in e):
+            out.append(float(re.match(r"\[t=\s*([0-9.]+)\]", e).group(1)))
+    return out
+
+
+def test_invalid_plan_requeue_advances_clock():
+    """Regression (zero-advance churn): a structurally-oversized tenant
+    with NO in-flight residue (``_next_release`` infinite) used to be
+    re-enqueued at clock + 1e-6 — max_retries burned back-to-back at one
+    instant.  The min_requeue_delta floor forces monotonic clock progress:
+    the retry budget is spent at exactly max_retries + 1 DISTINCT clock
+    times before the drop."""
+    cluster = _cluster((4.0,))
+    price = float(cluster.prices_per_sec[0])
+    # demand 5.0 > caps 4.0: every plan fails validation, and with no other
+    # tenant there is never in-flight residue to floor the backoff at
+    big = TenantRequest(_chain_dag("big", 2, 30.0, 5.0, 0.0, price))
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    sc = StreamConfig()
+    runner = StreamingRunner(_agora(cluster), [big], cfg, sc)
+    records = runner.run()
+    assert len(records) == 1 and records[0].failed
+    assert records[0].plan_retries == cfg.max_retries + 1
+    clocks = _round_clocks(runner.events, "big")
+    # one attempt per distinct clock: max_retries re-enqueues + the drop
+    assert len(clocks) == cfg.max_retries + 1
+    assert len(set(clocks)) == len(clocks)
+    for a, b in zip(clocks, clocks[1:]):
+        assert b - a >= sc.min_requeue_delta - 1e-9
+
+
+def test_preempt_backoff_floored_at_min_requeue_delta():
+    """The preemption path shares the floor: even with a zero stream-level
+    base backoff a victim never returns at (effectively) the same clock."""
+    cluster = _cluster((4.0,))
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    sc = StreamConfig(preempt_backoff=0.0)
+    runner = StreamingRunner(_agora(cluster), _contended_stream(cluster),
+                             cfg, sc)
+    from repro.flow.streaming import _TenantState
+    s = _TenantState(req=_contended_stream(cluster)[0],
+                     remaining=[0], ready_at=0.0)
+    assert runner._preempt_delay(s) >= sc.min_requeue_delta
+
+
+def test_records_exactly_once_across_reject_drop_and_served():
+    """Exactly-once StreamRecord emission across the three exit paths in
+    one stream: rejected at admission (never planned), dropped after plan
+    retries, and served — with declared_sla/deadline_met reported against
+    the ORIGINAL request in every case."""
+    cluster = _cluster((4.0,))
+    price = float(cluster.prices_per_sec[0])
+    reqs = [
+        # provably infeasible guaranteed: rejected at admission
+        TenantRequest(_chain_dag("doomed", 2, 50.0, 3.0, 0.0, price),
+                      sla=SLA_GUARANTEED, deadline=60.0),
+        # structurally oversized standard: dropped after max_retries
+        TenantRequest(_chain_dag("big", 2, 30.0, 5.0, 0.0, price)),
+        # a normal tenant: served
+        TenantRequest(_chain_dag("ok", 2, 30.0, 1.0, 0.0, price)),
+    ]
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    runner = StreamingRunner(_agora(cluster), reqs, cfg, StreamConfig())
+    records = runner.run()
+    names = [r.name for r in records]
+    assert sorted(names) == ["big", "doomed", "ok"]       # exactly once each
+    by = {r.name: r for r in records}
+    assert by["doomed"].admission == "rejected"
+    assert by["doomed"].failed and by["doomed"].rounds == 0
+    assert by["doomed"].sla == SLA_GUARANTEED
+    assert by["doomed"].deadline == 60.0
+    assert not by["doomed"].deadline_met                  # a miss, on record
+    assert by["big"].admission == "admitted"              # passed admission,
+    assert by["big"].failed                               # died in planning
+    assert by["big"].plan_retries == cfg.max_retries + 1
+    assert not by["ok"].failed and math.isfinite(by["ok"].finished)
+    # the rejected and dropped tenants consumed no pool capacity
+    s, f, d = runner.realized_intervals()
+    assert len(s) == 2                                    # ok's tasks only
+
+
+def test_deadline_hit_rate_counts_rejected_guaranteed_as_miss():
+    """A rejected guaranteed tenant is a deadline MISS in the aggregate
+    rate, not an excluded sample — shedding must never inflate the SLA."""
+    cluster = _cluster((4.0,))
+    price = float(cluster.prices_per_sec[0])
+    reqs = [
+        TenantRequest(_chain_dag("doomed", 2, 50.0, 3.0, 0.0, price),
+                      sla=SLA_GUARANTEED, deadline=60.0),   # rejected
+        TenantRequest(_chain_dag("g-ok", 2, 30.0, 1.0, 0.0, price),
+                      sla=SLA_GUARANTEED, deadline=500.0),  # comfortably met
+    ]
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    runner = StreamingRunner(_agora(cluster), reqs, cfg, StreamConfig())
+    records = runner.run()
+    assert len(records) == 2
+    by = {r.name: r for r in records}
+    assert by["doomed"].admission == "rejected" and not by["doomed"].deadline_met
+    assert by["g-ok"].deadline_met
+    assert deadline_hit_rate(records) == 0.5
