@@ -143,6 +143,19 @@ def run_daemon(flush: str, draws, cluster, cfg: VecConfig,
     g = [o for o in outcomes if o["sla"] == SLA_GUARANTEED]
     met = sum(o["hit"] for o in g)
     lat = st["latency"]
+    # event-derived mirror: the daemon's own deadline_hit/deadline_miss
+    # verdicts (the same aggregator /v1/stats serves) must reproduce the
+    # caller-side accounting — sheds included, both count them as misses
+    ev_met, ev_missed = service.aggregator.hit_counts(SLA_GUARANTEED)
+    events_match = ((ev_met, ev_missed) == (met, len(g) - met)
+                    and service.aggregator.retraces
+                    == st["trace_count"] - trace0)
+    if not events_match:
+        print(f"FAIL: flush={flush} event-derived accounting diverged from "
+              f"post-hoc: hits {ev_met}/{ev_missed} vs "
+              f"{met}/{len(g) - met}, retraces "
+              f"{service.aggregator.retraces} vs "
+              f"{st['trace_count'] - trace0}", flush=True)
     return dict(
         flush=flush, tenants=len(outcomes), guaranteed=len(g),
         guaranteed_met=met, hit_rate=met / max(len(g), 1),
@@ -153,7 +166,8 @@ def run_daemon(flush: str, draws, cluster, cfg: VecConfig,
         dags_per_sec=st["served"] / max(wall, 1e-9),
         batches=st["batches"], flush_fill=st["flush_fill"],
         flush_deadline=st["flush_deadline"], flush_wait=st["flush_wait"],
-        flush_drain=st["flush_drain"], widen_events=st["widen_events"])
+        flush_drain=st["flush_drain"], widen_events=st["widen_events"],
+        events=st["events"], events_match=events_match)
 
 
 def run_runner(draws, cluster, cfg: VecConfig, seed: int) -> dict:
@@ -212,6 +226,7 @@ def run_bench(*, tenants: int, arrivals: int, cfg: VecConfig, seed: int,
     abl_hit = fill["hit_rate"] < daemon["hit_rate"]
     abl_p99 = fill["p99_ms"] > daemon["p99_ms"]
     ok_abl = abl_hit or abl_p99
+    ok_events = daemon["events_match"] and fill["events_match"]
     print(f"# acceptance daemon: retrace_after_warmup="
           f"{daemon['retrace_after_warmup']}+{fill['retrace_after_warmup']} "
           f"({'OK' if ok_trace else 'FAIL'} == 0), "
@@ -219,7 +234,8 @@ def run_bench(*, tenants: int, arrivals: int, cfg: VecConfig, seed: int,
           f"hit_runner={runner['hit_rate']:.2f} "
           f"({'OK' if ok_hit else 'FAIL'} >=), "
           f"ablation worse on hit={abl_hit} p99={abl_p99} "
-          f"({'OK' if ok_abl else 'FAIL'} on >= 1)", flush=True)
+          f"({'OK' if ok_abl else 'FAIL'} on >= 1), "
+          f"events==post-hoc ({'OK' if ok_events else 'FAIL'})", flush=True)
 
     metrics.update(
         tenants=tenants, arrivals=arrivals, bucket=BUCKET,
@@ -227,7 +243,7 @@ def run_bench(*, tenants: int, arrivals: int, cfg: VecConfig, seed: int,
         **{k: daemon[k] for k in ("hit_rate", "p50_ms", "p99_ms",
                                   "retrace_after_warmup", "dags_per_sec")},
         deadline_mode=daemon, fill_ablation=fill, runner=runner)
-    return 0 if (ok_trace and ok_hit and ok_abl) else 1
+    return 0 if (ok_trace and ok_hit and ok_abl and ok_events) else 1
 
 
 def main(argv=None) -> int:

@@ -54,6 +54,7 @@ from repro.flow.streaming import (SLA_BEST_EFFORT, SLA_GUARANTEED,  # noqa: E402
                                   SLA_STANDARD, StreamConfig, StreamingRunner,
                                   TenantRequest, capacity_violations,
                                   deadline_hit_rate)
+from repro.obs.aggregate import EventAggregator  # noqa: E402
 
 
 def grab_lean_dag(name: str, t0: float, jitter: float, price: float) -> DAG:
@@ -125,7 +126,9 @@ def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
     warm = [r.dag for r in poisson_stream(4, cluster, seed + 91)]
     for d in warm:
         d.release_time = 0.0
-    sess = agora().session(shared_capacity=True, bucket_p=bucket)
+    sess_agg = EventAggregator()   # event-derived mirror of the gate
+    sess = agora().session(shared_capacity=True, bucket_p=bucket,
+                           sink=sess_agg)
     sess.warmup(warm[0])
     trace0 = sess.stats.trace_count
     sess.plan([PlanRequest(dag=d) for d in warm[:2]])
@@ -138,6 +141,13 @@ def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
     emit("bucket_retrace_delta", float(cache_delta),
          f"session.stats traces added by arrivals inside the P={bucket} "
          f"bucket (warmed)")
+    # the same contract, re-derived from the event stream: non-warming
+    # bucket_traced events == the post-hoc session.stats delta
+    ok_trace_events = (sess_agg.retraces == int(cache_delta)
+                       and sess_agg.warmup_traces > 0)
+    emit("bucket_retrace_events", float(sess_agg.retraces),
+         f"non-warming bucket_traced events (warmup traces: "
+         f"{sess_agg.warmup_traces})")
     bucket_lat = {
         str(b): {"warmup_s": bs.warmup_seconds, "steady_s": bs.steady_seconds}
         for b, bs in sorted(sess.stats.buckets.items())}
@@ -166,12 +176,16 @@ def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
         turnarounds = []
         cost = 0.0
         wall = 0.0
+        # one aggregator rides every draw of this mode so the event-derived
+        # hit rate aggregates across arrival processes exactly like the
+        # post-hoc loop below
+        agg = EventAggregator()
         for k in range(arrivals):
             fcfg = FlowConfig(mode="sim", enforce_capacity=True,
                               speculation=False, seed=seed + k)
             runner = StreamingRunner(
                 agora(), poisson_stream(tenants, cluster, seed + k),
-                fcfg, sc)
+                fcfg, sc, sink=agg)
             t0 = time.monotonic()
             records = runner.run()
             wall += time.monotonic() - t0
@@ -188,10 +202,21 @@ def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
             cost += float(sum(r.cost for r in records))
         hit = met / max(met + missed, 1)
         turn = float(np.mean(turnarounds))
+        # event-derived mirror: terminal deadline_hit/deadline_miss events
+        # for the guaranteed class, and capacity_violation events from the
+        # runners' realized-schedule audits, must equal the post-hoc counts
+        ev_met, ev_missed = agg.hit_counts(SLA_GUARANTEED)
+        ok_ev = ((ev_met, ev_missed) == (met, missed)
+                 and agg.violations == violations)
+        if not ok_ev:
+            print(f"FAIL: {mode} event-derived accounting diverged from "
+                  f"post-hoc: hits {ev_met}/{ev_missed} vs {met}/{missed}, "
+                  f"violations {agg.violations} vs {violations}", flush=True)
         results[mode] = dict(
             hit_rate=hit, guaranteed_met=met, guaranteed_missed=missed,
             violations=violations, rounds=rounds, preemptions=preempts,
             mean_turnaround_s=turn, total_cost=cost, wall_seconds=wall,
+            events=agg.snapshot(), events_match=ok_ev,
         )
         emit(f"stream_{mode}", wall * 1e6,
              f"P={tenants} x{arrivals} arrivals; hit={hit:.2f} "
@@ -206,18 +231,23 @@ def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
     ok_hit = hit_sla > hit_fifo
     ok_viol = (results["sla"]["violations"] == 0
                and results["fifo"]["violations"] == 0)
+    ok_events = (ok_trace_events and results["sla"]["events_match"]
+                 and results["fifo"]["events_match"])
     print(f"# acceptance streaming: hit_sla={hit_sla:.2f} vs "
           f"hit_fifo={hit_fifo:.2f} ({'OK' if ok_hit else 'FAIL'} strictly "
           f"higher), violations="
           f"{results['sla']['violations'] + results['fifo']['violations']} "
           f"({'OK' if ok_viol else 'FAIL'} == 0), retrace_delta="
-          f"{cache_delta} ({'OK' if ok_trace else 'FAIL'} == 0)", flush=True)
+          f"{cache_delta} ({'OK' if ok_trace else 'FAIL'} == 0), "
+          f"events==post-hoc ({'OK' if ok_events else 'FAIL'})", flush=True)
     metrics.update(
         tenants=tenants, arrivals=arrivals, bucket=bucket, hit_sla=hit_sla,
         hit_fifo=hit_fifo, retrace_delta=int(cache_delta),
         plan_dags_per_sec=plan_dags_per_sec, bucket_latency=bucket_lat,
-        sla=results["sla"], fifo=results["fifo"])
-    return 0 if (ok_hit and ok_viol and ok_trace) else 1
+        sla=results["sla"], fifo=results["fifo"],
+        events={"session": sess_agg.snapshot(),
+                "match": bool(ok_events)})
+    return 0 if (ok_hit and ok_viol and ok_trace and ok_events) else 1
 
 
 def main(argv=None) -> int:

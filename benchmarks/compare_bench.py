@@ -22,24 +22,18 @@ previous run's artifact exists (first run on a branch, expired retention).
 from __future__ import annotations
 
 import argparse
-import json
+import os
 import sys
 
-# distinct exit code for an absent artifact, so CI can tell "the trend
-# gate had nothing to compare" from "the trend gate failed"
-MISSING_BASELINE = 4
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.obs.artifacts import MISSING_ARTIFACT, load_artifact  # noqa: E402
 
-def load(path: str, role: str = "artifact") -> dict:
-    try:
-        with open(path) as f:
-            return json.load(f)
-    except FileNotFoundError:
-        print(f"MISSING {role}: {path} does not exist — the trend gate has "
-              f"nothing to compare; point it at a previous run's artifact "
-              f"or a committed benchmarks/baselines/ file "
-              f"(exit {MISSING_BASELINE})")
-        raise SystemExit(MISSING_BASELINE) from None
+# the distinct missing-artifact exit code is defined once in
+# repro.obs.artifacts (shared with repro.launch.obs_report); this alias
+# keeps the historical name used by CI scripts
+MISSING_BASELINE = MISSING_ARTIFACT
+load = load_artifact
 
 
 def compare(prev: dict, curr: dict, max_regression: float) -> int:

@@ -200,7 +200,8 @@ class Agora:
 
     def session(self, *, shared_capacity: bool = False, bucket_p=None,
                 mesh="inherit", goal: Optional[Goal] = None,
-                vec_cfg: Optional[VecConfig] = None) -> "PlannerSession":  # noqa: F821
+                vec_cfg: Optional[VecConfig] = None,
+                sink=None) -> "PlannerSession":  # noqa: F821
         """Open a compile-once / serve-many ``PlannerSession``.
 
         The session pins the static solve signature (engine, ``VecConfig``,
@@ -214,7 +215,7 @@ class Agora:
         return PlannerSession(
             self, shared_capacity=shared_capacity, bucket_p=bucket_p,
             mesh=_UNSET if isinstance(mesh, str) and mesh == "inherit"
-            else mesh, goal=goal, vec_cfg=vec_cfg)
+            else mesh, goal=goal, vec_cfg=vec_cfg, sink=sink)
 
     def _default_session(self, shared_capacity: bool = False, bucket_p=None):
         key = (bool(shared_capacity),

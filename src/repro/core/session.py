@@ -43,6 +43,10 @@ from repro.core.dag import DAG, FlatProblem, bucket_size, flatten
 from repro.core.objectives import Goal, Solution
 from repro.core.vectorized import (SolveBatch, SolveSpec, VecConfig,
                                    resolve_engine)
+from repro.obs import events as obs
+from repro.obs.aggregate import finite_or_none
+from repro.obs.events import Event
+from repro.obs.sink import as_sink
 
 # SLA classes (the streaming control plane re-exports these)
 SLA_GUARANTEED = "guaranteed"
@@ -264,7 +268,7 @@ class PlannerSession:
 
     def __init__(self, agora, *, shared_capacity: bool = False,
                  bucket_p=None, mesh=_UNSET, goal: Optional[Goal] = None,
-                 vec_cfg: Optional[VecConfig] = None):
+                 vec_cfg: Optional[VecConfig] = None, sink=None):
         self.agora = agora
         self.cluster = agora.cluster
         self.goal = goal or agora.goal
@@ -280,6 +284,10 @@ class PlannerSession:
                               mesh_axes=mesh_axes)
         self.engine = resolve_engine(self.spec)
         self.stats = SessionStats()
+        # observability plane: the no-op default is falsy, so every
+        # emission site below is `if self.sink:` — disabled costs one
+        # truthiness check and solves are bit-for-bit identical
+        self.sink = as_sink(sink)
         # warmed signatures: (bucket, Jmax, Omax) triples this session has
         # already traced — a batch landing inside one is served with zero
         # re-tracing BY construction; the serving daemon routes on this
@@ -398,14 +406,37 @@ class PlannerSession:
                 bucket_p = max(int(bucket_p or 1),
                                mesh.shape[mesh.axis_names[0]])
             bucket = bucket_size(len(problems), bucket_p)
+            jmax, omax = _batch_shape(problems)
             self._account(bucket, traced, dt, warming=warming)
-            self.envelopes.add((bucket,) + _batch_shape(problems))
+            self.envelopes.add((bucket, jmax, omax))
+
+        if self.sink:
+            self._emit_dispatch(traced, dt, bucket=bucket, jmax=jmax,
+                                omax=omax, warming=warming)
+            if not warming:
+                self.sink.emit(Event(
+                    obs.PLAN_SOLVED, ts=time.monotonic(),
+                    data={"kind": "plan", "n": len(requests),
+                          "bucket": bucket, "traced": traced,
+                          "seconds": dt}))
 
         plans = [Plan(p, s, g, cluster, r, joint_errors=joint_errors)
                  for p, s, r, g in zip(problems, sols, refs, goals)]
         return [PlanResult(plan, req, index=i, bucket=bucket, traced=traced,
                            solve_seconds=dt)
                 for i, (plan, req) in enumerate(zip(plans, requests))]
+
+    def _emit_dispatch(self, traced: bool, seconds: float, *, bucket: int,
+                       jmax: Optional[int] = None,
+                       omax: Optional[int] = None,
+                       warming: bool = False) -> None:
+        """Exactly one of ``bucket_traced`` / ``cache_hit`` per engine
+        dispatch (call sites guard with ``if self.sink:``)."""
+        data = {"bucket": bucket, "seconds": seconds, "warming": warming}
+        if jmax is not None:
+            data["jmax"], data["omax"] = jmax, omax
+        self.sink.emit(Event(obs.BUCKET_TRACED if traced else obs.CACHE_HIT,
+                             ts=time.monotonic(), data=data))
 
     def _account(self, bucket: int, traced: bool, seconds: float, *,
                  warming: bool = False, replan: bool = False) -> None:
@@ -525,6 +556,12 @@ class PlannerSession:
             dt = time.monotonic() - t0
             traced = self._single_cache_size() > n0
             self._account(1, traced, dt)
+        if self.sink:
+            self._emit_dispatch(traced, dt, bucket=1)
+            self.sink.emit(Event(
+                obs.PLAN_SOLVED, ts=time.monotonic(),
+                data={"kind": "plan_joint", "n": len(tuple(dags)),
+                      "bucket": 1, "traced": traced, "seconds": dt}))
         return PlanResult(Plan(problem, sol, goal, self.cluster, ref),
                           request=None, bucket=1, traced=traced,
                           solve_seconds=dt)
@@ -567,6 +604,12 @@ class PlannerSession:
             dt = time.monotonic() - t0
             traced = self._single_cache_size() > n0
             self._account(1, traced, dt, replan=True)
+        if self.sink:
+            self._emit_dispatch(traced, dt, bucket=1)
+            self.sink.emit(Event(
+                obs.PLAN_SOLVED, ts=time.monotonic(),
+                data={"kind": "replan", "n": 1, "bucket": 1,
+                      "traced": traced, "seconds": dt}))
         return PlanResult(Plan(prob, sol, self.goal, cluster, ref),
                           request=None, bucket=1, traced=traced,
                           solve_seconds=dt)
@@ -603,10 +646,10 @@ class PlannerSession:
             if not fits:
                 with self._lock:
                     self.stats.rejected += 1
-                return AdmissionDecision(
+                return self._emit_admission(request, AdmissionDecision(
                     False, f"task {j} ({task.name}) fits no configuration "
                            f"within capacity {caps.tolist()}",
-                    completion_lower_bound=math.inf)
+                    completion_lower_bound=math.inf))
             min_dur[j] = min(fits)
         start = max(now, available_at if available_at is not None else now)
         cp = problem.as_dag().critical_path_lengths(min_dur)
@@ -615,10 +658,26 @@ class PlannerSession:
         if math.isfinite(request.deadline) and lb > request.deadline + 1e-9:
             with self._lock:
                 self.stats.rejected += 1
-            return AdmissionDecision(
+            return self._emit_admission(request, AdmissionDecision(
                 False, f"critical-path lower bound t={lb:.1f} overshoots "
                        f"deadline t={request.deadline:.1f}",
-                completion_lower_bound=lb)
+                completion_lower_bound=lb))
         with self._lock:
             self.stats.admitted += 1
-        return AdmissionDecision(True, completion_lower_bound=lb)
+        return self._emit_admission(
+            request, AdmissionDecision(True, completion_lower_bound=lb))
+
+    def _emit_admission(self, request: PlanRequest,
+                        decision: AdmissionDecision) -> AdmissionDecision:
+        """One ``admission_decision`` event per ``admit`` call — every exit
+        (structural reject, deadline reject, admit) routes through here."""
+        if self.sink:
+            self.sink.emit(Event(
+                obs.ADMISSION_DECISION, ts=time.monotonic(),
+                tenant=request.name, sla=request.sla,
+                data={"admitted": decision.admitted,
+                      "reason": decision.reason,
+                      "deadline": finite_or_none(request.deadline),
+                      "lower_bound":
+                          finite_or_none(decision.completion_lower_bound)}))
+        return decision

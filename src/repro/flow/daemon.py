@@ -60,6 +60,10 @@ from repro.core.objectives import Goal
 from repro.core.session import (SLA_CLASSES, SLA_GUARANTEED, SLA_STANDARD,
                                 AdmissionDecision, PlanRequest, PlanResult,
                                 _normalize_request)
+from repro.obs import events as obs
+from repro.obs.aggregate import EventAggregator
+from repro.obs.events import Event
+from repro.obs.sink import TagSink, TeeSink
 
 __all__ = [
     "PoolSpec", "DaemonConfig", "DaemonStats", "LoadShedError",
@@ -114,6 +118,9 @@ class DaemonConfig:
     clock: Callable[[], float] = time.monotonic
     time_scale: float = 1.0
     router: Optional[Callable[[PlanRequest], str]] = None
+    # optional operator sink (e.g. JsonlSink) teed with the service's
+    # always-on internal EventAggregator; None = aggregator only
+    sink: Any = None
 
     def __post_init__(self):
         assert self.flush in ("deadline", "fill"), self.flush
@@ -199,15 +206,20 @@ class PlannerService:
     def __init__(self, agora, cfg: Optional[DaemonConfig] = None):
         self.agora = agora
         self.cfg = cfg or DaemonConfig()
+        # always-on event plane: the internal aggregator re-derives
+        # /v1/stats and the latency percentiles from the SAME stream an
+        # operator sink (cfg.sink, e.g. a JSON-lines file) tails
+        self.aggregator = EventAggregator()
+        self.sink = TeeSink(self.aggregator, self.cfg.sink)
         self.entries: Dict[str, _PoolEntry] = {}
         for spec in self.cfg.pools:
             session = agora.session(
                 shared_capacity=spec.shared_capacity, bucket_p=spec.bucket_p,
-                mesh=spec.mesh, goal=spec.goal)
+                mesh=spec.mesh, goal=spec.goal,
+                sink=TagSink(self.sink, pool=spec.name))
             self.entries[spec.name] = _PoolEntry(spec, session)
         self.default_pool = self.cfg.pools[0].name
         self.stats_counters = DaemonStats()
-        self._latency_wall: List[float] = []   # submit -> plan, wall seconds
         # one dedicated thread traces out-of-envelope signatures so the
         # per-pool serving executors never stall behind a compile
         self._widen_pool = ThreadPoolExecutor(
@@ -290,6 +302,25 @@ class PlannerService:
                              f"(have {sorted(self.entries)})")
         return self.entries[name]
 
+    def _emit_shed(self, entry: _PoolEntry, request: PlanRequest,
+                   reason: str) -> None:
+        """One ``drop`` per shed submission — plus the terminal
+        ``deadline_miss`` for deadline-bearing requests, so event-derived
+        hit rates count sheds exactly the way the benchmarks do."""
+        if not self.sink:
+            return
+        now_v = self._now()
+        pool = entry.spec.name
+        self.sink.emit(Event(obs.DROP, ts=now_v, tenant=request.name,
+                             pool=pool, sla=request.sla,
+                             data={"reason": reason}))
+        if math.isfinite(request.deadline):
+            self.sink.emit(Event(
+                obs.DEADLINE_MISS, ts=now_v, tenant=request.name,
+                pool=pool, sla=request.sla,
+                data={"deadline": request.deadline, "completion": None,
+                      "reason": reason, "failed": True}))
+
     async def submit(self, request: Union[PlanRequest, DAG], *,
                      pool: Optional[str] = None) -> PlanResult:
         """Submit one planning request; resolves to its ``PlanResult``
@@ -306,6 +337,7 @@ class PlannerService:
         self.stats_counters.submitted += 1
         if len(entry.pending) >= self.cfg.max_queue:
             self.stats_counters.shed_queue += 1
+            self._emit_shed(entry, request, "queue_full")
             raise LoadShedError(
                 f"pool {entry.spec.name!r}: backlog full "
                 f"({len(entry.pending)} >= {self.cfg.max_queue})")
@@ -325,6 +357,7 @@ class PlannerService:
             if (self.cfg.admission_control and not decision.admitted
                     and request.sla == SLA_GUARANTEED):
                 self.stats_counters.shed_admission += 1
+                self._emit_shed(entry, request, "admission")
                 raise LoadShedError(
                     f"admission: {decision.reason}", decision)
         fut = asyncio.get_running_loop().create_future()
@@ -409,7 +442,7 @@ class PlannerService:
                 getattr(self.stats_counters, f"flush_{cause}") + 1)
         self.stats_counters.batches += 1
         task = asyncio.create_task(
-            self._dispatch(entry, batch),
+            self._dispatch(entry, batch, cause),
             name=f"dispatch-{entry.spec.name}-{self.stats_counters.batches}")
         self._dispatches.add(task)
         task.add_done_callback(self._dispatches.discard)
@@ -437,9 +470,10 @@ class PlannerService:
                    for d in r.dags for t in d.tasks)
         return jmax, omax
 
-    async def _dispatch(self, entry: _PoolEntry,
-                        batch: List[_Pending]) -> None:
+    async def _dispatch(self, entry: _PoolEntry, batch: List[_Pending],
+                        cause: str = "fill") -> None:
         now_v = self._now()
+        pool = entry.spec.name
         requests = [
             dataclasses.replace(p.request, goal=self._goal_for(p.request,
                                                                now_v))
@@ -453,6 +487,12 @@ class PlannerService:
             # serving executor keeps flowing warm batches, and pre-warm
             # the NEXT bucket so sustained growth stays ahead of traffic
             self.stats_counters.widen_events += 1
+            if self.sink:
+                self.sink.emit(Event(
+                    obs.ENVELOPE_WIDENED, ts=now_v, pool=pool,
+                    data={"bucket": entry.session.bucket_for(len(requests)),
+                          "jmax": jmax, "omax": omax,
+                          "warmed": sorted(entry.session.envelopes)}))
             executor = self._widen_pool
         loop = asyncio.get_running_loop()
         try:
@@ -460,16 +500,44 @@ class PlannerService:
                 executor, lambda: entry.session.plan(requests))
         except Exception as exc:  # noqa: BLE001 — surfaced per future
             self.stats_counters.errors += 1
+            if self.sink:
+                for p in batch:
+                    self.sink.emit(Event(
+                        obs.DROP, ts=self._now(), tenant=p.request.name,
+                        pool=pool, sla=p.request.sla,
+                        data={"reason": "solve_error",
+                              "error": repr(exc)}))
             for p in batch:
                 if not p.future.done():
                     p.future.set_exception(exc)
             return
         wall = time.monotonic()
+        done_v = self._now()
+        latencies = [wall - p.submit_wall for p in batch]
         for p, res in zip(batch, results):
-            self._latency_wall.append(wall - p.submit_wall)
             if not p.future.done():
                 p.future.set_result(res)
         self.stats_counters.served += len(batch)
+        if self.sink:
+            # one dispatch event (wall latencies feed the aggregator's
+            # p50/p99), plus the per-request plan-level deadline verdict —
+            # virtual delivery time + planned completion vs the absolute
+            # deadline, the same verdict the benchmarks compute post-hoc
+            self.sink.emit(Event(
+                obs.DISPATCH, ts=done_v, pool=pool,
+                data={"mode": "daemon", "cause": cause, "n": len(batch),
+                      "warm": warm, "latency_s": latencies}))
+            for p, res in zip(batch, results):
+                if math.isfinite(p.request.deadline):
+                    completion = done_v + float(
+                        res.plan.solution.finish.max())
+                    hit = completion <= p.request.deadline + 1e-6
+                    self.sink.emit(Event(
+                        obs.DEADLINE_HIT if hit else obs.DEADLINE_MISS,
+                        ts=done_v, tenant=p.request.name, pool=pool,
+                        sla=p.request.sla,
+                        data={"deadline": p.request.deadline,
+                              "completion": completion, "failed": False}))
         if not warm and self.cfg.auto_widen and self._running:
             self._pre_warm_next(entry, requests, jmax, omax)
 
@@ -494,15 +562,16 @@ class PlannerService:
     def latency_percentiles(self,
                             qs: Sequence[float] = (50.0, 99.0)
                             ) -> Dict[str, float]:
-        """Submit-to-plan WALL latency percentiles, seconds."""
-        if not self._latency_wall:
-            return {f"p{q:g}": math.nan for q in qs}
-        arr = np.asarray(self._latency_wall)
-        return {f"p{q:g}": float(np.percentile(arr, q)) for q in qs}
+        """Submit-to-plan WALL latency percentiles, seconds — derived
+        from the event plane (the ``dispatch`` events' latency payloads),
+        not a separate counter."""
+        return self.aggregator.latency_percentiles(qs)
 
     def stats(self) -> Dict[str, Any]:
         """One aggregated snapshot: daemon counters, wall-latency
-        percentiles, and every pool session's zero-retrace evidence."""
+        percentiles, every pool session's zero-retrace evidence, and the
+        event-plane roll-up (``events`` block, from the same aggregator
+        the benchmarks gate on)."""
         pools = {}
         trace_count = cache_hits = warmups = 0
         for name, entry in self.entries.items():
@@ -532,6 +601,7 @@ class PlannerService:
             "latency": self.latency_percentiles(),
             **dataclasses.asdict(self.stats_counters),
             "pools": pools,
+            "events": self.aggregator.snapshot(),
         }
 
 

@@ -32,6 +32,8 @@ import numpy as np
 
 from repro.core.agora import Agora, Plan
 from repro.core.session import PlanRequest
+from repro.obs import events as obs
+from repro.obs.events import Event
 
 
 @dataclasses.dataclass
@@ -412,7 +414,7 @@ class MultiTenantRunner:
 
     def __init__(self, agora: Agora, dags, cfg: Optional[FlowConfig] = None,
                  window: float = 900.0, shared_cluster: bool = False,
-                 bucket_p=None):
+                 bucket_p=None, sink=None):
         self.agora = agora
         self.dags = sorted(dags, key=lambda d: d.release_time)
         self.cfg = cfg or FlowConfig()
@@ -421,9 +423,12 @@ class MultiTenantRunner:
         # every planning round rides ONE PlannerSession: the solve
         # signature (engine, VecConfig, mesh, bucket schedule) is pinned
         # once and the session's stats expose the trace/cache behavior of
-        # the whole run
+        # the whole run.  The sink is shared with the session, so solver
+        # and control-plane events interleave in one stream (flow events
+        # carry the VIRTUAL clock in ``ts``; see docs/events.md).
         self.session = agora.session(shared_capacity=shared_cluster,
-                                     bucket_p=bucket_p)
+                                     bucket_p=bucket_p, sink=sink)
+        self.sink = self.session.sink
         self.rounds: List[int] = []      # batch size per planning round
         self.events: List[str] = []
 
@@ -476,6 +481,10 @@ class MultiTenantRunner:
                     self.events.append(
                         f"[t={clock:9.1f}] tenant {dag.name}: plan invalid "
                         f"after {n} rounds — dropped")
+                    if self.sink:
+                        self.sink.emit(Event(
+                            obs.DROP, ts=clock, tenant=dag.name,
+                            data={"reason": "invalid_plan", "rounds": n}))
                     records.append(TenantRecord(
                         name=dag.name, submitted=submitted[dag.name],
                         planned_at=clock, finished=math.inf,
@@ -533,6 +542,11 @@ class MultiTenantRunner:
 
     def _dispatch_isolated(self, clock, good, tenant_seq, plan_attempts,
                            submitted, records) -> float:
+        if self.sink:
+            self.sink.emit(Event(
+                obs.DISPATCH, ts=clock,
+                data={"mode": "isolated", "n": len(good),
+                      "tenants": [d.name for d, _ in good]}))
         completion = clock
         for k, (dag, plan) in enumerate(good):
             res = FlowRunner(plan,
@@ -553,6 +567,11 @@ class MultiTenantRunner:
         """Execute the whole round as ONE joint workflow against the shared
         capacity pool, then split the result back into per-tenant records."""
         from repro.core.agora import combine_plans
+        if self.sink:
+            self.sink.emit(Event(
+                obs.DISPATCH, ts=clock,
+                data={"mode": "shared", "n": len(good),
+                      "tenants": [d.name for d, _ in good]}))
         joint = combine_plans([plan for _, plan in good])
         # planned starts gate launches: the joint schedule's staggering IS
         # the capacity arbitration, so the executor must honor it

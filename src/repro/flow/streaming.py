@@ -51,6 +51,9 @@ from repro.core.session import (SLA_BEST_EFFORT, SLA_CLASSES, SLA_GUARANTEED,
 from repro.flow.executor import (FlowConfig, FlowResult, FlowRunner,
                                  MultiTenantRunner, TenantRecord,
                                  _backoff_delay)
+from repro.obs import events as obs
+from repro.obs.aggregate import finite_or_none
+from repro.obs.events import Event
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,7 +210,7 @@ class StreamingRunner(MultiTenantRunner):
     def __init__(self, agora: Agora, requests: Sequence[TenantRequest],
                  cfg: Optional[FlowConfig] = None,
                  stream: Optional[StreamConfig] = None,
-                 shared_cluster: bool = True):
+                 shared_cluster: bool = True, sink=None):
         requests = sorted(requests, key=lambda r: r.submit)
         # ONE session for the whole stream (built by the parent): the
         # bucket schedule and engine are pinned here, residual-capacity
@@ -217,7 +220,7 @@ class StreamingRunner(MultiTenantRunner):
         self.stream = stream or StreamConfig()
         super().__init__(agora, [r.dag for r in requests], cfg,
                          window=0.0, shared_cluster=shared_cluster,
-                         bucket_p=self.stream.bucket_p)
+                         bucket_p=self.stream.bucket_p, sink=sink)
         self.requests = requests
         self.preempt_events = 0
         self.arrival_replans = 0
@@ -309,6 +312,7 @@ class StreamingRunner(MultiTenantRunner):
         records: List[StreamRecord] = []
         self._executed: List[Tuple[float, float, np.ndarray]] = []
         clock = 0.0
+        self._clock = 0.0              # round clock, for terminal events
         drain_end = 0.0
         while pending:
             clock = max(clock, min(s.ready_at for s in pending))
@@ -327,6 +331,7 @@ class StreamingRunner(MultiTenantRunner):
                         break
                     clock = nxt
             caps_round = np.maximum(self._residual_caps(clock), 0.0)
+            self._clock = clock
             batch = [s for s in pending if s.ready_at <= clock + 1e-9]
             pending = [s for s in pending if s.ready_at > clock + 1e-9]
             # admission control: a fresh guaranteed arrival whose deadline
@@ -364,6 +369,11 @@ class StreamingRunner(MultiTenantRunner):
                             f"[t={clock:9.1f}] tenant {s.name}: guaranteed "
                             f"deadline provably infeasible "
                             f"({decision.reason}) — rejected at admission")
+                        if self.sink:
+                            self.sink.emit(Event(
+                                obs.DROP, ts=clock, tenant=s.name,
+                                sla=s.declared_sla,
+                                data={"reason": "admission_rejected"}))
                         records.append(self._record(s, math.inf, failed=True))
             # capacity-fragmentation guard: a tenant none of whose options
             # fit the round's free sliver waits for the next residue
@@ -413,6 +423,12 @@ class StreamingRunner(MultiTenantRunner):
                                 f"[t={clock:9.1f}] tenant {s.name}: plan "
                                 f"invalid after {s.plan_retries} rounds — "
                                 f"dropped")
+                            if self.sink:
+                                self.sink.emit(Event(
+                                    obs.DROP, ts=clock, tenant=s.name,
+                                    sla=s.declared_sla,
+                                    data={"reason": "invalid_plan",
+                                          "rounds": s.plan_retries}))
                             records.append(
                                 self._record(s, math.inf, failed=True))
                             continue
@@ -456,6 +472,13 @@ class StreamingRunner(MultiTenantRunner):
                         delay = self._preempt_delay(victim)
                         victim.ready_at = clock + delay
                         pending.append(victim)
+                        if self.sink:
+                            self.sink.emit(Event(
+                                obs.PREEMPT, ts=clock, tenant=victim.name,
+                                sla=victim.declared_sla,
+                                data={"reason": "deadline_risk",
+                                      "at_risk": [s.name for s in risky],
+                                      "backoff": delay}))
                         self.events.append(
                             f"[t={clock:9.1f}] preempted best-effort tenant "
                             f"{victim.name} for deadline risk of "
@@ -480,6 +503,12 @@ class StreamingRunner(MultiTenantRunner):
                                 s.deferrals += 1
                                 s.ready_at = residue_next
                                 pending.append(s)
+                                if self.sink:
+                                    self.sink.emit(Event(
+                                        obs.DEFER, ts=clock, tenant=s.name,
+                                        sla=s.declared_sla,
+                                        data={"until": residue_next,
+                                              "deferrals": s.deferrals}))
                                 self.events.append(
                                     f"[t={clock:9.1f}] deferred guaranteed "
                                     f"tenant {s.name} to "
@@ -518,6 +547,17 @@ class StreamingRunner(MultiTenantRunner):
             if sc.replan_on_arrival and math.isfinite(next_cut):
                 horizon = max(next_cut - clock, 0.0)
             res = self._dispatch(clock, good, horizon)
+            if self.sink:
+                self.sink.emit(Event(
+                    obs.DISPATCH, ts=clock,
+                    data={"mode": "stream", "n": len(good),
+                          "tenants": [s.name for s, _ in good],
+                          "tasks": sum(p.problem.num_tasks
+                                       for _, p in good),
+                          "horizon": finite_or_none(horizon),
+                          "finished": len(res.task_finish),
+                          "withheld": len(res.unlaunched),
+                          "free_caps": caps_round.tolist()}))
             if res.task_finish:
                 drain_end = clock + max(res.task_finish.values())
             else:
@@ -530,7 +570,32 @@ class StreamingRunner(MultiTenantRunner):
             self._executed.extend(self._intervals_of(*self.dispatches[-1]))
             requeue_at = next_cut if math.isfinite(next_cut) else drain_end
             pending.extend(self._merge(clock, good, res, requeue_at, records))
+        if self.sink:
+            self.capacity_audit()
         return records
+
+    def capacity_audit(self) -> Tuple[List[str], np.ndarray]:
+        """Sweep every realized interval against the global caps: returns
+        (violations, realized headroom = elementwise min of caps - usage
+        over the run).  Emits one ``capacity_violation`` event per error
+        and one ``capacity_audit`` event carrying the headroom — the
+        single accounting the bench gate and ``/v1``-style reporting
+        share."""
+        caps = np.asarray(self.agora.cluster.caps, float)
+        start, finish, demands = self.realized_intervals()
+        errs = capacity_violations(start, finish, demands, caps)
+        headroom = realized_headroom(start, finish, demands, caps)
+        if self.sink:
+            now = getattr(self, "_clock", 0.0)
+            for e in errs:
+                self.sink.emit(Event(obs.CAPACITY_VIOLATION, ts=now,
+                                     data={"error": e}))
+            self.sink.emit(Event(
+                obs.CAPACITY_AUDIT, ts=now,
+                data={"headroom": headroom.tolist(),
+                      "caps": caps.tolist(),
+                      "intervals": int(len(start))}))
+        return errs, headroom
 
     # ------------------------------------------------------------------
 
@@ -629,7 +694,7 @@ class StreamingRunner(MultiTenantRunner):
         req = s.req
         realized = (finished - min(s.started.values()) if s.started
                     else math.inf)
-        return StreamRecord(
+        rec = StreamRecord(
             name=s.name, submitted=req.submit,
             planned_at=s.first_planned if math.isfinite(s.first_planned)
             else req.submit,
@@ -645,6 +710,19 @@ class StreamingRunner(MultiTenantRunner):
             and finished <= s.declared_deadline + 1e-6,
             preemptions=s.preemptions, rounds=s.rounds,
             admission=s.admission)
+        # _record is the exactly-once terminal point of every tenant
+        # (rejected, dropped, or served), so the terminal deadline verdict
+        # rides it: one deadline_hit/deadline_miss event per tenant
+        if self.sink:
+            self.sink.emit(Event(
+                obs.DEADLINE_HIT if rec.deadline_met else obs.DEADLINE_MISS,
+                ts=getattr(self, "_clock", 0.0), tenant=rec.name,
+                sla=rec.sla,
+                data={"deadline": finite_or_none(rec.deadline),
+                      "completion": finite_or_none(rec.finished),
+                      "failed": rec.failed,
+                      "admission": rec.admission}))
+        return rec
 
     # ------------------------------------------------------------------
 
@@ -698,6 +776,19 @@ def capacity_violations(start: np.ndarray, finish: np.ndarray,
                         f"(resources {over.tolist()})")
             break
     return errs
+
+
+def realized_headroom(start: np.ndarray, finish: np.ndarray,
+                      demands: np.ndarray, caps: np.ndarray) -> np.ndarray:
+    """Realized capacity headroom: elementwise min over the run's event
+    points of ``caps - usage`` (the full caps when nothing executed)."""
+    caps = np.asarray(caps, float)
+    head = caps.copy()
+    for pt in np.unique(np.concatenate([start, finish])):
+        active = (start <= pt + 1e-12) & (pt + 1e-12 < finish)
+        if active.any():
+            head = np.minimum(head, caps - demands[active].sum(axis=0))
+    return head
 
 
 def deadline_hit_rate(records: Sequence[StreamRecord],

@@ -25,6 +25,7 @@ from repro.core.objectives import Goal
 from repro.core.vectorized import VecConfig
 from repro.flow.daemon import (DaemonConfig, PlannerHTTPServer,
                                PlannerService, PoolSpec)
+from repro.obs.sink import NULL, JsonlSink
 
 
 def demo_cluster(cores: float = 16.0, price: float = 0.0475) -> Cluster:
@@ -48,11 +49,14 @@ async def _serve(args) -> None:
     agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
                   vec_cfg=VecConfig(chains=args.chains, iters=args.iters,
                                     grid=args.grid, seed=0))
+    # operator sink: tail with `tail -f events.jsonl` or fold after the
+    # fact with `python -m repro.launch.obs_report events.jsonl`
+    sink = JsonlSink(args.events) if args.events else NULL
     cfg = DaemonConfig(
         pools=(PoolSpec("shared", shared_capacity=True,
                         bucket_p=args.bucket),),
         max_batch=args.max_batch, max_wait_s=args.max_wait,
-        slack_margin_s=args.slack_margin, flush=args.flush)
+        slack_margin_s=args.slack_margin, flush=args.flush, sink=sink)
     service = PlannerService(agora, cfg)
     print(f"warming buckets up to P={args.max_batch} ...", flush=True)
     warm = service.warmup(demo_template(), max_p=args.max_batch)
@@ -68,6 +72,7 @@ async def _serve(args) -> None:
             await asyncio.Event().wait()   # serve until interrupted
         finally:
             await http.stop()
+            sink.close()
 
 
 def main(argv=None) -> None:
@@ -84,6 +89,9 @@ def main(argv=None) -> None:
                     help="deadline-flush safety margin (s)")
     ap.add_argument("--flush", default="deadline",
                     choices=("deadline", "fill"))
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="append the structured event stream to this "
+                         "JSON-lines file (see docs/events.md)")
     ap.add_argument("--chains", type=int, default=16)
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--grid", type=int, default=128)

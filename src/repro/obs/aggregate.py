@@ -1,0 +1,184 @@
+"""Fold the event stream into per-tenant / per-pool serving metrics.
+
+``EventAggregator`` is itself a ``Sink``, so it can ride live traffic
+(the daemon keeps one internally and re-derives ``/v1/stats`` from it) or
+fold a recorded stream after the fact (``EventAggregator.fold``) — the
+``obs_report`` CLI and the ``bench_streaming`` / ``bench_daemon`` gates
+run on exactly this fold, so benchmark accounting and serving accounting
+are ONE code path.
+
+What it derives (see docs/events.md for the event-type reference):
+
+* SLA hit rate by DECLARED class — ``deadline_hit`` / ``deadline_miss``
+  terminal events, finite-deadline tenants only (the same filter as
+  ``flow.streaming.deadline_hit_rate``);
+* retrace count — ``bucket_traced`` events with ``warming=False`` (the
+  zero-retrace contract, observable in flight);
+* realized capacity headroom — elementwise min over ``capacity_audit``
+  sweeps, plus the ``capacity_violation`` count;
+* p50/p99 submit-to-plan latency — the per-request wall latencies carried
+  on daemon ``dispatch`` events.
+"""
+from __future__ import annotations
+
+import collections
+import math
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.obs import events as ev
+from repro.obs.events import Event
+from repro.obs.sink import Sink
+
+
+def finite_or_none(x) -> Optional[float]:
+    """JSON-safe number: ``inf``/``nan`` (not representable in strict
+    JSON) travel as ``null`` on the wire."""
+    if x is None:
+        return None
+    x = float(x)
+    return x if math.isfinite(x) else None
+
+
+class EventAggregator(Sink):
+    """Streaming fold of the event plane (thread-safe; the daemon's pools
+    emit into one aggregator concurrently)."""
+
+    def __init__(self):
+        # reentrant: snapshot() reads derived metrics that re-take the lock
+        self._lock = threading.RLock()
+        self.counts: collections.Counter = collections.Counter()
+        # declared SLA class -> [hits, misses] (finite-deadline tenants)
+        self._deadline: Dict[str, List[int]] = {}
+        self.retraces = 0                  # non-warming bucket_traced
+        self.warmup_traces = 0             # warming bucket_traced
+        self.cache_hits = 0
+        self.violations = 0
+        self.headroom: Optional[List[float]] = None   # elementwise min
+        self.latencies: List[float] = []   # submit-to-plan wall seconds
+        # pool -> counter dict (plans/traces/cache_hits/served/...)
+        self.pools: Dict[str, collections.Counter] = {}
+        # tenant -> terminal verdict (exactly one per tenant when the
+        # emitting layer honors its exactly-once contract)
+        self.tenants: Dict[str, Dict[str, Any]] = {}
+
+    # -- Sink ----------------------------------------------------------
+
+    def emit(self, event: Event) -> None:
+        with self._lock:
+            self._fold(event)
+
+    def _pool(self, name: Optional[str]) -> collections.Counter:
+        return self.pools.setdefault(name or "", collections.Counter())
+
+    def _fold(self, e: Event) -> None:
+        self.counts[e.type] += 1
+        pool = self._pool(e.pool) if e.pool is not None else None
+        if e.type == ev.BUCKET_TRACED:
+            if e.data.get("warming"):
+                self.warmup_traces += 1
+            else:
+                self.retraces += 1
+            if pool is not None:
+                pool["traces"] += 1
+        elif e.type == ev.CACHE_HIT:
+            self.cache_hits += 1
+            if pool is not None:
+                pool["cache_hits"] += 1
+        elif e.type == ev.PLAN_SOLVED:
+            if pool is not None:
+                pool["plans"] += 1
+                pool["served"] += int(e.data.get("n", 1))
+        elif e.type == ev.DISPATCH:
+            if pool is not None:
+                pool["dispatches"] += 1
+            self.latencies.extend(float(x) for x in
+                                  e.data.get("latency_s", ()))
+        elif e.type in (ev.DEADLINE_HIT, ev.DEADLINE_MISS):
+            hit = e.type == ev.DEADLINE_HIT
+            sla = e.sla or ""
+            if e.data.get("deadline") is not None:
+                hm = self._deadline.setdefault(sla, [0, 0])
+                hm[0 if hit else 1] += 1
+            if e.tenant is not None:
+                self.tenants[e.tenant] = {
+                    "sla": sla, "hit": hit,
+                    "deadline": e.data.get("deadline"),
+                    "completion": e.data.get("completion"),
+                    "reason": e.data.get("reason"),
+                }
+        elif e.type == ev.CAPACITY_VIOLATION:
+            self.violations += 1
+        elif e.type == ev.CAPACITY_AUDIT:
+            head = e.data.get("headroom")
+            if head is not None:
+                head = [float(x) for x in head]
+                if self.headroom is None:
+                    self.headroom = head
+                else:
+                    self.headroom = [min(a, b) for a, b
+                                     in zip(self.headroom, head)]
+
+    # -- derived metrics -----------------------------------------------
+
+    def hit_counts(self, sla: str) -> Tuple[int, int]:
+        """(hits, misses) of finite-deadline tenants in declared class
+        ``sla`` — the event-derived mirror of the post-hoc benchmark
+        accounting."""
+        with self._lock:
+            h, m = self._deadline.get(sla, (0, 0))
+        return h, m
+
+    def hit_rate(self, sla: str) -> float:
+        """Fraction of finite-deadline ``sla``-class tenants that met
+        their deadline (1.0 when none — same convention as
+        ``flow.streaming.deadline_hit_rate``)."""
+        h, m = self.hit_counts(sla)
+        return h / (h + m) if (h + m) else 1.0
+
+    def latency_percentiles(self, qs: Sequence[float] = (50.0, 99.0)
+                            ) -> Dict[str, float]:
+        """Submit-to-plan wall-latency percentiles (seconds) from daemon
+        ``dispatch`` events; NaN before any traffic."""
+        with self._lock:
+            lat = sorted(self.latencies)
+        if not lat:
+            return {f"p{q:g}": math.nan for q in qs}
+        # linear-interpolated percentile (numpy's default), stdlib-only so
+        # the docs/report path needs no array stack
+        def pct(q: float) -> float:
+            pos = (len(lat) - 1) * q / 100.0
+            lo = int(math.floor(pos))
+            hi = min(lo + 1, len(lat) - 1)
+            return lat[lo] + (lat[hi] - lat[lo]) * (pos - lo)
+        return {f"p{q:g}": pct(q) for q in qs}
+
+    def snapshot(self) -> Dict[str, Any]:
+        """One JSON-able roll-up: what ``/v1/stats`` serves under
+        ``events`` and what ``obs_report`` prints."""
+        with self._lock:
+            deadline = {sla: {"hits": h, "misses": m,
+                              "rate": h / (h + m) if (h + m) else 1.0}
+                        for sla, (h, m) in sorted(self._deadline.items())}
+            return {
+                "schema": ev.SCHEMA_VERSION,
+                "events": sum(self.counts.values()),
+                "counts": dict(sorted(self.counts.items())),
+                "retraces": self.retraces,
+                "warmup_traces": self.warmup_traces,
+                "cache_hits": self.cache_hits,
+                "deadline": deadline,
+                "violations": self.violations,
+                "headroom": self.headroom,
+                "latency": self.latency_percentiles(),
+                "pools": {name: dict(sorted(c.items()))
+                          for name, c in sorted(self.pools.items())},
+                "tenants": len(self.tenants),
+            }
+
+    @classmethod
+    def fold(cls, stream: Iterable[Event]) -> "EventAggregator":
+        agg = cls()
+        for e in stream:
+            agg.emit(e)
+        return agg

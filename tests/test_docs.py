@@ -1,0 +1,19 @@
+"""Docs stay true in tier-1: the same gate CI's docs job runs.
+
+``tools/check_docs.py`` syntax-checks every fenced python snippet in
+README.md and docs/, resolves every relative link, and asserts
+docs/events.md covers every ``repro.obs.events.EVENT_TYPES`` entry at
+the current schema version.
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_docs_snippets_links_and_event_reference():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,110 @@
+"""Docs gate: snippets must parse, links must resolve, events.md must
+cover every event type.
+
+Pure stdlib (plus ``repro.obs``, itself stdlib-only), so the CI docs job
+runs on a bare Python with no jax installed:
+
+  python tools/check_docs.py
+
+Checks, over README.md and docs/*.md:
+
+* every fenced ``python`` block compiles (syntax — snippets rot silently
+  otherwise; blocks that are intentionally illustrative fragments can opt
+  out with a ```` ```python no-check ```` info string);
+* every relative markdown link / image target exists on disk (anchors and
+  absolute URLs are skipped);
+* ``docs/events.md`` names every event type in
+  ``repro.obs.events.EVENT_TYPES`` and states the current
+  ``SCHEMA_VERSION`` — the schema reference must not drift from the code.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.obs.events import EVENT_TYPES, SCHEMA_VERSION  # noqa: E402
+
+FENCE = re.compile(r"^```(\S*)([^\n]*)\n(.*?)^```\s*$",
+                   re.MULTILINE | re.DOTALL)
+# [text](target) — excluding images' leading ! is unnecessary: both must
+# resolve. Inline code spans are stripped first so `foo(bar)` survives.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`[^`]*`")
+
+
+def doc_files() -> list[str]:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    for name in sorted(os.listdir(docs_dir)):
+        if name.endswith(".md"):
+            docs.append(os.path.join(docs_dir, name))
+    return docs
+
+
+def check_snippets(path: str, text: str) -> list[str]:
+    errs = []
+    for m in FENCE.finditer(text):
+        lang, info, body = m.group(1), m.group(2), m.group(3)
+        if lang != "python" or "no-check" in info:
+            continue
+        line = text[:m.start()].count("\n") + 2
+        try:
+            # top-level await/async-with is legal in snippets, as in the
+            # asyncio REPL — serving examples read better unwrapped
+            compile(body, f"{path}:{line}", "exec",
+                    flags=ast.PyCF_ALLOW_TOP_LEVEL_AWAIT)
+        except SyntaxError as e:
+            errs.append(f"{path}:{line}: python snippet does not parse: {e}")
+    return errs
+
+
+def check_links(path: str, text: str) -> list[str]:
+    errs = []
+    # fenced blocks and inline code are not link territory
+    stripped = CODE_SPAN.sub("", FENCE.sub("", text))
+    for target in LINK.findall(stripped):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errs.append(f"{path}: broken link -> {target}")
+    return errs
+
+
+def check_event_reference() -> list[str]:
+    errs = []
+    path = os.path.join(ROOT, "docs", "events.md")
+    text = open(path).read()
+    for etype in EVENT_TYPES:
+        if f"`{etype}`" not in text:
+            errs.append(f"{path}: event type `{etype}` is undocumented")
+    if f"schema v{SCHEMA_VERSION}" not in text:
+        errs.append(f"{path}: does not state the current schema version "
+                    f"(expected 'schema v{SCHEMA_VERSION}')")
+    return errs
+
+
+def main() -> int:
+    errs = []
+    for path in doc_files():
+        text = open(path).read()
+        errs += check_snippets(path, text)
+        errs += check_links(path, text)
+    errs += check_event_reference()
+    for e in errs:
+        print(e)
+    n_docs = len(doc_files())
+    print(f"check_docs: {n_docs} files, {len(errs)} problem(s)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
