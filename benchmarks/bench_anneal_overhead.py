@@ -1,0 +1,38 @@
+"""Fig. 10: optimization overhead vs predicted runtime benefit for growing
+problem sizes (1..N random DAGs of ~10 tasks, width 4, depth 3-5 — the §5.4
+generator). Benefit = (airflow makespan - AGORA makespan)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.cluster.catalog import alibaba_cluster
+from repro.cluster.workloads import synth_trace
+from repro.core.annealer import AnnealConfig, anneal
+from repro.core.baselines import airflow_plan
+from repro.core.dag import flatten
+from repro.core.objectives import Goal
+
+
+def main(dag_counts=(1, 2, 5, 10, 20), seed: int = 0):
+    cluster = alibaba_cluster(machines=20)
+    for n in dag_counts:
+        dags = synth_trace(n, cluster, seed=seed, tasks_lo=10, tasks_hi=10,
+                           submit_rate=1e9)  # all released at t=0
+        prob = flatten(dags, cluster.num_resources)
+        af = airflow_plan(prob, cluster)
+        cfg = AnnealConfig(seed=seed, min_iters=300,
+                           max_iters=min(1500, 80 * prob.num_tasks),
+                           patience=200)
+        t0 = time.monotonic()
+        sol = anneal(prob, cluster, Goal.runtime(), cfg,
+                     (af.makespan, af.cost))
+        overhead = time.monotonic() - t0
+        benefit = af.makespan - sol.makespan
+        emit(f"fig10/tasks{prob.num_tasks}", overhead * 1e6,
+             f"overhead={overhead:.1f}s benefit={benefit:.0f}s "
+             f"worth_it={benefit > overhead}")
+
+
+if __name__ == "__main__":
+    main()

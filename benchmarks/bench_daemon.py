@@ -66,6 +66,9 @@ from repro.flow.daemon import (DaemonConfig, LoadShedError,  # noqa: E402
 from repro.flow.executor import FlowConfig  # noqa: E402
 from repro.flow.streaming import (StreamConfig, StreamingRunner,  # noqa: E402
                                   deadline_hit_rate)
+from repro.obs.events import read_jsonl  # noqa: E402
+from repro.obs.sink import JsonlSink  # noqa: E402
+from repro.obs.trace import chain_complete, spans, trace_ids  # noqa: E402
 
 BUCKET = 8
 DEADLINE_BUDGET = 500.0    # virtual s of slack past submission (generous
@@ -113,16 +116,22 @@ async def _replay_draw(service: PlannerService, clock: WarpClock, reqs):
 
 
 def run_daemon(flush: str, draws, cluster, cfg: VecConfig,
-               scale: float) -> dict:
+               scale: float, events_path: str = None) -> dict:
     """One service lifetime (warmup -> every draw -> drain) under the
-    given flush policy; returns hit/latency/trace metrics."""
+    given flush policy; returns hit/latency/trace metrics.  With
+    ``events_path`` the full event stream is taped to a JSONL file and
+    every submission's causal chain is checked complete (submit root ->
+    terminal span) straight off the tape."""
     clock = WarpClock(scale)
     agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
                   vec_cfg=cfg)
+    if events_path and os.path.exists(events_path):
+        os.remove(events_path)         # fresh tape per service lifetime
+    tape_sink = JsonlSink(events_path) if events_path else None
     service = PlannerService(agora, DaemonConfig(
         pools=(PoolSpec("shared", shared_capacity=True, bucket_p=BUCKET),),
         max_batch=BUCKET, max_wait_s=400.0, slack_margin_s=250.0,
-        flush=flush, clock=clock, time_scale=scale))
+        flush=flush, clock=clock, time_scale=scale, sink=tape_sink))
     template = dataclasses.replace(draws[0][0].dag, release_time=0.0)
     t0 = time.monotonic()
     service.warmup(template, max_p=BUCKET)
@@ -140,9 +149,23 @@ def run_daemon(flush: str, draws, cluster, cfg: VecConfig,
     outcomes = asyncio.run(run_all())
     wall = time.monotonic() - t0
     st = service.stats()
+    if tape_sink is not None:
+        tape_sink.close()
+    # causal-trace gate: every submission (served OR shed) must leave a
+    # complete submit -> ... -> terminal span chain on the tape
+    chains_total = chains_complete = None
+    if events_path:
+        tape = list(read_jsonl(events_path))
+        ids = trace_ids(tape)
+        chains_total = len(ids)
+        chains_complete = sum(chain_complete(spans(tape, t)) for t in ids)
     g = [o for o in outcomes if o["sla"] == SLA_GUARANTEED]
     met = sum(o["hit"] for o in g)
     lat = st["latency"]
+    # explicit None before any dispatch (never a fabricated number); NaN
+    # keeps the metric numeric for the emit/compare paths below
+    p50_ms = float("nan") if lat["p50"] is None else lat["p50"] * 1e3
+    p99_ms = float("nan") if lat["p99"] is None else lat["p99"] * 1e3
     # event-derived mirror: the daemon's own deadline_hit/deadline_miss
     # verdicts (the same aggregator /v1/stats serves) must reproduce the
     # caller-side accounting — sheds included, both count them as misses
@@ -160,14 +183,16 @@ def run_daemon(flush: str, draws, cluster, cfg: VecConfig,
         flush=flush, tenants=len(outcomes), guaranteed=len(g),
         guaranteed_met=met, hit_rate=met / max(len(g), 1),
         shed=sum(o["shed"] for o in outcomes),
-        p50_ms=lat["p50"] * 1e3, p99_ms=lat["p99"] * 1e3,
+        p50_ms=p50_ms, p99_ms=p99_ms,
         retrace_after_warmup=st["trace_count"] - trace0,
         warmup_wall_s=warm_wall, serve_wall_s=wall,
         dags_per_sec=st["served"] / max(wall, 1e-9),
         batches=st["batches"], flush_fill=st["flush_fill"],
         flush_deadline=st["flush_deadline"], flush_wait=st["flush_wait"],
         flush_drain=st["flush_drain"], widen_events=st["widen_events"],
-        events=st["events"], events_match=events_match)
+        events=st["events"], events_match=events_match,
+        events_path=events_path, chains_total=chains_total,
+        chains_complete=chains_complete)
 
 
 def run_runner(draws, cluster, cfg: VecConfig, seed: int) -> dict:
@@ -196,14 +221,18 @@ def run_runner(draws, cluster, cfg: VecConfig, seed: int) -> dict:
 
 
 def run_bench(*, tenants: int, arrivals: int, cfg: VecConfig, seed: int,
-              scale: float, metrics: dict) -> int:
+              scale: float, metrics: dict, events_base: str = None) -> int:
     cluster = Cluster((InstanceType("cores", 1, 0, 0.0475),), (16,))
     draws = [poisson_stream(tenants, cluster, seed + k,
                             deadline_budget=DEADLINE_BUDGET)
              for k in range(arrivals)]
 
-    daemon = run_daemon("deadline", draws, cluster, cfg, scale)
-    fill = run_daemon("fill", draws, cluster, cfg, scale)
+    tape = (lambda mode: f"{events_base}.{mode}.jsonl") if events_base \
+        else (lambda mode: None)
+    daemon = run_daemon("deadline", draws, cluster, cfg, scale,
+                        events_path=tape("deadline"))
+    fill = run_daemon("fill", draws, cluster, cfg, scale,
+                      events_path=tape("fill"))
     runner = run_runner(draws, cluster, cfg, seed)
 
     for name, d in (("daemon", daemon), ("fill_ablation", fill)):
@@ -227,6 +256,13 @@ def run_bench(*, tenants: int, arrivals: int, cfg: VecConfig, seed: int,
     abl_p99 = fill["p99_ms"] > daemon["p99_ms"]
     ok_abl = abl_hit or abl_p99
     ok_events = daemon["events_match"] and fill["events_match"]
+    # trace-chain completeness off the JSONL tape: one chain per
+    # submission, every chain submit-rooted and terminated
+    ok_chains = all(
+        d["chains_total"] is None
+        or (d["chains_total"] == d["tenants"]
+            and d["chains_complete"] == d["chains_total"])
+        for d in (daemon, fill))
     print(f"# acceptance daemon: retrace_after_warmup="
           f"{daemon['retrace_after_warmup']}+{fill['retrace_after_warmup']} "
           f"({'OK' if ok_trace else 'FAIL'} == 0), "
@@ -235,7 +271,11 @@ def run_bench(*, tenants: int, arrivals: int, cfg: VecConfig, seed: int,
           f"({'OK' if ok_hit else 'FAIL'} >=), "
           f"ablation worse on hit={abl_hit} p99={abl_p99} "
           f"({'OK' if ok_abl else 'FAIL'} on >= 1), "
-          f"events==post-hoc ({'OK' if ok_events else 'FAIL'})", flush=True)
+          f"events==post-hoc ({'OK' if ok_events else 'FAIL'}), "
+          f"trace chains complete "
+          f"{daemon['chains_complete']}/{daemon['chains_total']} + "
+          f"{fill['chains_complete']}/{fill['chains_total']} "
+          f"({'OK' if ok_chains else 'FAIL'})", flush=True)
 
     metrics.update(
         tenants=tenants, arrivals=arrivals, bucket=BUCKET,
@@ -243,7 +283,8 @@ def run_bench(*, tenants: int, arrivals: int, cfg: VecConfig, seed: int,
         **{k: daemon[k] for k in ("hit_rate", "p50_ms", "p99_ms",
                                   "retrace_after_warmup", "dags_per_sec")},
         deadline_mode=daemon, fill_ablation=fill, runner=runner)
-    return 0 if (ok_trace and ok_hit and ok_abl and ok_events) else 1
+    return 0 if (ok_trace and ok_hit and ok_abl and ok_events
+                 and ok_chains) else 1
 
 
 def main(argv=None) -> int:
@@ -255,10 +296,18 @@ def main(argv=None) -> int:
                     help="virtual seconds per wall second (time warp)")
     ap.add_argument("--json", default="BENCH_daemon.json",
                     help="where to persist the run's metrics")
+    ap.add_argument("--events", default="BENCH_daemon_events",
+                    metavar="BASE",
+                    help="JSONL event-tape base path (one tape per flush "
+                         "mode: BASE.deadline.jsonl / BASE.fill.jsonl); "
+                         "'none' disables taping and the chain gate")
     args = ap.parse_args([] if argv is None else argv)
     header()
     if args.smoke:
-        cfg = VecConfig(chains=16, iters=80, grid=96, seed=0)
+        # telemetry on: the smoke tape carries solve_profile events and
+        # the chain gate runs against a telemetry-bearing signature
+        cfg = VecConfig(chains=16, iters=80, grid=96, seed=0,
+                        telemetry=True)
         tenants, arrivals, scale = 8, 2, 80.0
     else:
         cfg = VecConfig(chains=32, iters=200, grid=128, seed=0)
@@ -267,7 +316,9 @@ def main(argv=None) -> int:
         scale = args.scale
     daemon: dict = {}
     status = run_bench(tenants=tenants, arrivals=arrivals, cfg=cfg,
-                       seed=args.seed, scale=scale, metrics=daemon)
+                       seed=args.seed, scale=scale, metrics=daemon,
+                       events_base=None if args.events == "none"
+                       else args.events)
     write_json(args.json, {
         "smoke": bool(args.smoke),
         "throughput": {"daemon": {"dags_per_sec": daemon["dags_per_sec"]}},

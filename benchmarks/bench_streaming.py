@@ -55,6 +55,7 @@ from repro.flow.streaming import (SLA_BEST_EFFORT, SLA_GUARANTEED,  # noqa: E402
                                   TenantRequest, capacity_violations,
                                   deadline_hit_rate)
 from repro.obs.aggregate import EventAggregator  # noqa: E402
+from repro.obs.sink import JsonlSink, TeeSink  # noqa: E402
 
 
 def grab_lean_dag(name: str, t0: float, jitter: float, price: float) -> DAG:
@@ -106,7 +107,7 @@ def poisson_stream(tenants: int, cluster: Cluster, seed: int,
 
 
 def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
-               metrics: dict) -> int:
+               metrics: dict, events_base: str = None) -> int:
     """Gate over ``arrivals`` independent Poisson arrival processes: single
     draws can be infeasible at the ceiling (two guaranteed tenants whose
     deadlines no policy can both meet), so the hit-rate comparison
@@ -178,14 +179,23 @@ def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
         wall = 0.0
         # one aggregator rides every draw of this mode so the event-derived
         # hit rate aggregates across arrival processes exactly like the
-        # post-hoc loop below
+        # post-hoc loop below; with events_base the same stream is also
+        # taped to a JSONL file (the CI workflow uploads + trace-smokes it)
         agg = EventAggregator()
+        tape = None
+        sink = agg
+        if events_base:
+            path = f"{events_base}.{mode}.jsonl"
+            if os.path.exists(path):
+                os.remove(path)        # fresh tape per run
+            tape = JsonlSink(path)
+            sink = TeeSink(agg, tape)
         for k in range(arrivals):
             fcfg = FlowConfig(mode="sim", enforce_capacity=True,
                               speculation=False, seed=seed + k)
             runner = StreamingRunner(
                 agora(), poisson_stream(tenants, cluster, seed + k),
-                fcfg, sc, sink=agg)
+                fcfg, sc, sink=sink)
             t0 = time.monotonic()
             records = runner.run()
             wall += time.monotonic() - t0
@@ -200,6 +210,8 @@ def run_stream(*, tenants: int, cfg: VecConfig, seed: int, arrivals: int,
             rounds += len(runner.rounds)
             preempts += runner.preempt_events
             cost += float(sum(r.cost for r in records))
+        if tape is not None:
+            tape.close()
         hit = met / max(met + missed, 1)
         turn = float(np.mean(turnarounds))
         # event-derived mirror: terminal deadline_hit/deadline_miss events
@@ -257,6 +269,11 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="BENCH_streaming.json",
                     help="where to persist the run's metrics")
+    ap.add_argument("--events", default="BENCH_streaming_events",
+                    metavar="BASE",
+                    help="JSONL event-tape base path (one tape per mode: "
+                         "BASE.sla.jsonl / BASE.fifo.jsonl); 'none' "
+                         "disables taping")
     args = ap.parse_args([] if argv is None else argv)
     header()
     if args.smoke:
@@ -267,7 +284,9 @@ def main(argv=None) -> int:
         tenants, arrivals = 12, 4
     streaming: dict = {}
     status = run_stream(tenants=tenants, cfg=cfg, seed=args.seed,
-                        arrivals=arrivals, metrics=streaming)
+                        arrivals=arrivals, metrics=streaming,
+                        events_base=None if args.events == "none"
+                        else args.events)
     write_json(args.json, {
         "smoke": bool(args.smoke),
         # planner-throughput shape shared with BENCH_multi_tenant.json so

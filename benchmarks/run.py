@@ -21,7 +21,9 @@ SUITES = {
     "fig7": ("benchmarks.bench_overall", "Fig. 7 overall"),
     "fig8": ("benchmarks.bench_breakdown", "Fig. 8 breakdown"),
     "fig9": ("benchmarks.bench_goals", "Fig. 9 goals"),
-    "fig10": ("benchmarks.bench_overhead", "Fig. 10 overhead"),
+    "fig10": ("benchmarks.bench_anneal_overhead", "Fig. 10 overhead"),
+    "obs_overhead": ("benchmarks.bench_overhead",
+                     "observability-plane overhead gate"),
     "macro": ("benchmarks.bench_macro", "Fig. 11 Alibaba-like macro"),
     "solver": ("benchmarks.bench_solver_perf", "§5.4 solver parallelization"),
     "multitenant": ("benchmarks.bench_multi_tenant",

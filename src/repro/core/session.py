@@ -82,12 +82,18 @@ class PlanRequest:
       in ``goal.deadline``; see ``flow.streaming.sla_goal``).
     * ``ref`` — (makespan, cost) reference point of Eq. 1; ``None`` means
       "compute it for me" (per request, so a mixed list is fine).
+    * ``trace`` — causal trace id (schema v2): stamped once at the front
+      door (daemon ``submit`` / streaming arrival), carried through every
+      layer that handles the request, and echoed on the events they emit
+      (``Event.trace_id`` / batch ``data["trace_ids"]``) so
+      ``obs_report --trace`` can reconstruct the request's span timeline.
     """
     dag: Union[DAG, Tuple[DAG, ...]]
     goal: Optional[Goal] = None
     sla: str = SLA_STANDARD
     deadline: float = math.inf
     ref: Optional[Tuple[float, float]] = None
+    trace: Optional[str] = None
 
     @property
     def dags(self) -> Tuple[DAG, ...]:
@@ -98,16 +104,81 @@ class PlanRequest:
         return "+".join(d.name for d in self.dags)
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvergenceTrace:
+    """The strided in-solve convergence telemetry of ONE request's problem,
+    folded from the solver's aux outputs (``VecConfig.telemetry``).
+
+    ``steps`` are the sampled sweep indices; ``best_e`` the incumbent
+    (best-so-far) energy at each sample — monotone non-increasing;
+    ``accept`` the Metropolis acceptance fraction across chains at the
+    sample sweep; ``migrations`` the cumulative replica-exchange count.
+    """
+    steps: np.ndarray
+    best_e: np.ndarray
+    accept: np.ndarray
+    migrations: np.ndarray
+    iters: int = 0                     # total SA sweeps of the solve
+    chains: int = 0
+
+    @classmethod
+    def from_telemetry(cls, tel) -> Optional["ConvergenceTrace"]:
+        """Fold the raw per-problem aux dict a batched solver attached to
+        its Solution (``None`` in, ``None`` out — host solvers and
+        telemetry-off solves carry no aux)."""
+        if not tel:
+            return None
+        return cls(steps=np.asarray(tel["steps"]),
+                   best_e=np.asarray(tel["best_e"], float),
+                   accept=np.asarray(tel["accept"], float),
+                   migrations=np.asarray(tel["migrations"]),
+                   iters=int(tel["iters"]), chains=int(tel["chains"]))
+
+    @property
+    def steps_to_best(self) -> int:
+        """First sampled sweep at which the incumbent had already reached
+        its final energy — the budget the solve actually needed."""
+        at_final = self.best_e <= self.best_e[-1]
+        return int(self.steps[int(np.argmax(at_final))])
+
+    @property
+    def plateau_fraction(self) -> float:
+        """Fraction of the sampled trace spent flat at the final incumbent
+        (1.0 = the whole recorded trace was plateau — step budget wasted)."""
+        return float(np.mean(self.best_e <= self.best_e[-1]))
+
+    @property
+    def accept_decay(self) -> float:
+        """Acceptance-rate drop from the first to the last sample (positive
+        = the cooling schedule is biting; ~0 = still random-walking)."""
+        return float(self.accept[0] - self.accept[-1])
+
+    def summary(self) -> Dict[str, object]:
+        """JSON-safe roll-up — the ``solve_profile`` event payload."""
+        return {"steps_to_best": self.steps_to_best,
+                "plateau_fraction": self.plateau_fraction,
+                "accept_first": float(self.accept[0]),
+                "accept_last": float(self.accept[-1]),
+                "accept_decay": self.accept_decay,
+                "best_e": float(self.best_e[-1]),
+                "migrations": int(self.migrations[-1]),
+                "samples": int(len(self.steps)),
+                "iters": self.iters, "chains": self.chains}
+
+
 @dataclasses.dataclass
 class PlanResult:
     """One served plan plus its serving context (which request, which
-    bucket, whether this batch traced or rode the warm cache)."""
+    bucket, whether this batch traced or rode the warm cache).
+    ``convergence`` carries the request's in-solve telemetry when the
+    session's ``VecConfig.telemetry`` flag is on (else ``None``)."""
     plan: "Plan"                       # noqa: F821 — repro.core.agora.Plan
     request: Optional[PlanRequest]
     index: int = 0
     bucket: int = 1                    # padded problem-axis extent served at
     traced: bool = False               # batch added a JIT cache entry (cold)
     solve_seconds: float = 0.0         # wall time of the whole batch solve
+    convergence: Optional[ConvergenceTrace] = None
 
     @property
     def solution(self) -> Solution:
@@ -410,31 +481,54 @@ class PlannerSession:
             self._account(bucket, traced, dt, warming=warming)
             self.envelopes.add((bucket, jmax, omax))
 
+        convs = [ConvergenceTrace.from_telemetry(getattr(s, "telemetry",
+                                                         None))
+                 for s in sols]
+        trace_ids = [r.trace for r in requests if r.trace is not None]
         if self.sink:
             self._emit_dispatch(traced, dt, bucket=bucket, jmax=jmax,
-                                omax=omax, warming=warming)
+                                omax=omax, warming=warming,
+                                trace_ids=trace_ids)
             if not warming:
+                data = {"kind": "plan", "n": len(requests),
+                        "bucket": bucket, "traced": traced, "seconds": dt}
+                if trace_ids:
+                    data["trace_ids"] = trace_ids
                 self.sink.emit(Event(
-                    obs.PLAN_SOLVED, ts=time.monotonic(),
-                    data={"kind": "plan", "n": len(requests),
-                          "bucket": bucket, "traced": traced,
-                          "seconds": dt}))
+                    obs.PLAN_SOLVED, ts=time.monotonic(), data=data))
+                if any(c is not None for c in convs):
+                    # exactly ONE solve_profile per live engine dispatch:
+                    # the convergence roll-up of every telemetry-bearing
+                    # request in the batch
+                    profiles = [dict(tenant=req.name, **c.summary())
+                                for req, c in zip(requests, convs)
+                                if c is not None]
+                    pdata = {"n": len(requests), "bucket": bucket,
+                             "seconds": dt, "profiles": profiles}
+                    if trace_ids:
+                        pdata["trace_ids"] = trace_ids
+                    self.sink.emit(Event(
+                        obs.SOLVE_PROFILE, ts=time.monotonic(), data=pdata))
 
         plans = [Plan(p, s, g, cluster, r, joint_errors=joint_errors)
                  for p, s, r, g in zip(problems, sols, refs, goals)]
         return [PlanResult(plan, req, index=i, bucket=bucket, traced=traced,
-                           solve_seconds=dt)
-                for i, (plan, req) in enumerate(zip(plans, requests))]
+                           solve_seconds=dt, convergence=conv)
+                for i, (plan, req, conv)
+                in enumerate(zip(plans, requests, convs))]
 
     def _emit_dispatch(self, traced: bool, seconds: float, *, bucket: int,
                        jmax: Optional[int] = None,
                        omax: Optional[int] = None,
-                       warming: bool = False) -> None:
+                       warming: bool = False,
+                       trace_ids: Optional[List[str]] = None) -> None:
         """Exactly one of ``bucket_traced`` / ``cache_hit`` per engine
         dispatch (call sites guard with ``if self.sink:``)."""
         data = {"bucket": bucket, "seconds": seconds, "warming": warming}
         if jmax is not None:
             data["jmax"], data["omax"] = jmax, omax
+        if trace_ids:
+            data["trace_ids"] = list(trace_ids)
         self.sink.emit(Event(obs.BUCKET_TRACED if traced else obs.CACHE_HIT,
                              ts=time.monotonic(), data=data))
 
@@ -675,6 +769,8 @@ class PlannerSession:
             self.sink.emit(Event(
                 obs.ADMISSION_DECISION, ts=time.monotonic(),
                 tenant=request.name, sla=request.sla,
+                trace_id=request.trace,
+                parent=obs.SUBMIT if request.trace else None,
                 data={"admitted": decision.admitted,
                       "reason": decision.reason,
                       "deadline": finite_or_none(request.deadline),

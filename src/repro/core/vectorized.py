@@ -67,6 +67,17 @@ class VecConfig:
     # the Pallas interpreter — bit-identical, used by CPU CI for parity.
     use_pallas: Optional[bool] = None
     interpret: Optional[bool] = None
+    # in-solve convergence telemetry: the SA scan additionally returns a
+    # strided aux trace (per-(stride, problem) incumbent energy, acceptance
+    # rate, cumulative replica exchanges) as extra JIT outputs — pure
+    # extra outputs, no io_callback, so the solve trajectory and its RNG
+    # streams are untouched. ``telemetry`` is static like every VecConfig
+    # field: ON is a DISTINCT warmed signature (own bucket family, still
+    # zero-retrace), OFF traces the exact program shipped before this flag
+    # existed and stays bit-for-bit identical. One sample is recorded every
+    # ``telemetry_every`` sweeps (plus the final sweep).
+    telemetry: bool = False
+    telemetry_every: int = 10
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +320,16 @@ def _migrate_chains(opt, prio, e, best_opt, best_prio, best_e, axis_name):
             jnp.where(oh, b_e, e))
 
 
+def _telemetry_steps(iters: int, every: int) -> np.ndarray:
+    """Static sweep indices the telemetry trace samples: every ``every``-th
+    sweep plus the final one (the converged incumbent is always visible)."""
+    every = max(int(every), 1)
+    steps = np.arange(every - 1, iters, every)
+    if len(steps) == 0 or steps[-1] != iters - 1:
+        steps = np.append(steps, iters - 1)
+    return steps.astype(np.int32)
+
+
 def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
              cfg: VecConfig, opt0, prio0, key,
              axis_name: Optional[str] = None, j_max=None):
@@ -317,7 +338,12 @@ def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
     ``j_max`` (traced scalar, default J) bounds mutation targets; batched
     multi-problem solves pass the per-problem real-task count so moves never
     land on masked padding slots (clamped to >= 1 so fully masked bucket-
-    padding problems keep a well-defined — and inert — mutation target)."""
+    padding problems keep a well-defined — and inert — mutation target).
+
+    With ``cfg.telemetry`` the returned state additionally carries the
+    strided convergence trace (``tel_best_e`` / ``tel_accept`` /
+    ``tel_mig``, each (S,) over the sampled sweeps) as extra scan outputs;
+    the annealing trajectory itself is untouched either way."""
     B, J = opt0.shape
     if j_max is None:
         j_max = J
@@ -368,11 +394,30 @@ def _sa_scan(dp: DeviceProblem, goal_w, ref_M, ref_C, dl, dl_w,
             do_mig, migrate, lambda a: a,
             (opt, prio, e, best_opt, best_prio, best_e))
 
+        if cfg.telemetry:
+            # incumbent energy and acceptance fraction over ALL chains:
+            # under chain sharding the collectives make every device carry
+            # the global values, so the trace is layout-independent
+            cur_best = jnp.min(best_e)
+            acc = jnp.mean(accept.astype(jnp.float32))
+            if axis_name is not None:
+                cur_best = jax.lax.pmin(cur_best, axis_name)
+                acc = jax.lax.pmean(acc, axis_name)
+            ys = dict(best_e=cur_best, accept=acc,
+                      migrated=do_mig.astype(jnp.int32))
+        else:
+            ys = None
         return dict(opt=opt, prio=prio, e=e, best_opt=best_opt,
                     best_prio=best_prio, best_e=best_e,
-                    T=state["T"] * cfg.cooling), None
+                    T=state["T"] * cfg.cooling), ys
 
-    state, _ = jax.lax.scan(step, state0, jnp.arange(cfg.iters))
+    state, ys = jax.lax.scan(step, state0, jnp.arange(cfg.iters))
+    if cfg.telemetry:
+        idx = jnp.asarray(_telemetry_steps(cfg.iters, cfg.telemetry_every))
+        state = dict(state,
+                     tel_best_e=ys["best_e"][idx],
+                     tel_accept=ys["accept"][idx],
+                     tel_mig=jnp.cumsum(ys["migrated"])[idx])
     return state
 
 
@@ -488,15 +533,20 @@ def _run_sa_many_sharded_jit(per_problem, caps, goal_w, ref_M, ref_C, dl,
                              opt0, prio0, keys)
 
     pbj = P(ap, ac)
+    out_specs = dict(opt=pbj, prio=pbj, e=P(ap, ac), best_opt=pbj,
+                     best_prio=pbj, best_e=P(ap, ac),
+                     # the vmap over problems makes the cooled
+                     # temperature per-problem (P,), sharded like them
+                     T=P(ap))
+    if cfg.telemetry:
+        # (P, S) traces shard with their problems; the chain axis was
+        # already reduced globally inside the scan (pmin/pmean)
+        out_specs.update(tel_best_e=P(ap), tel_accept=P(ap), tel_mig=P(ap))
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=((P(ap),) * len(per_problem), P(ap), P(ap), P(ap), P(ap),
                   P(ap), pbj, pbj, P(ap), P()),
-        out_specs=dict(opt=pbj, prio=pbj, e=P(ap, ac), best_opt=pbj,
-                       best_prio=pbj, best_e=P(ap, ac),
-                       # the vmap over problems makes the cooled
-                       # temperature per-problem (P,), sharded like them
-                       T=P(ap)))
+        out_specs=out_specs)
     return fn(per_problem, goal_w, ref_M, ref_C, dl, dl_w, opt0, prio0,
               keys, caps)
 
@@ -569,6 +619,23 @@ def _pad_refs(ref_M: np.ndarray, ref_C: np.ndarray, padded: int):
     pad = padded - len(ref_M)
     return (np.concatenate([ref_M, np.ones(pad)]),
             np.concatenate([ref_C, np.ones(pad)]))
+
+
+def _attach_telemetry(sols: List[Solution], state, cfg: VecConfig) -> None:
+    """Hand each Solution its problem's row of the strided convergence
+    trace (bucket-padding rows are dropped with the padding problems).
+    ``PlannerSession`` folds these into ``ConvergenceTrace``s; consumers
+    must treat the attribute as optional — host solvers never set it."""
+    if not cfg.telemetry or "tel_best_e" not in state:
+        return
+    steps = _telemetry_steps(cfg.iters, cfg.telemetry_every)
+    best = np.asarray(state["tel_best_e"])
+    acc = np.asarray(state["tel_accept"])
+    mig = np.asarray(state["tel_mig"])
+    for p, sol in enumerate(sols):
+        sol.telemetry = dict(steps=steps.copy(), best_e=best[p],
+                             accept=acc[p], migrations=mig[p],
+                             iters=cfg.iters, chains=cfg.chains)
 
 
 def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
@@ -651,6 +718,7 @@ def vectorized_anneal_many(problems: Sequence[FlatProblem], cluster: Cluster,
                        solver="agora-vectorized-many")
         sol.solve_seconds = elapsed   # batch wall time: one dispatch for all P
         sols.append(sol)
+    _attach_telemetry(sols, state, cfg)
     return sols
 
 
@@ -833,13 +901,35 @@ def _sa_scan_shared(sdp: SharedDeviceProblem, goal_w, ref_M, ref_C,
             do_mig, migrate, lambda a: a,
             (opt, prio, e, best_opt, best_prio, best_e))
 
+        if cfg.telemetry:
+            # per-tenant incumbents/acceptance over the chain axis; global
+            # across chain shards via the same collectives as _sa_scan
+            cur_best = jnp.min(best_e, axis=1)                       # (P,)
+            acc = jnp.mean(accept.astype(jnp.float32), axis=1)       # (P,)
+            if axis_name is not None:
+                cur_best = jax.lax.pmin(cur_best, axis_name)
+                acc = jax.lax.pmean(acc, axis_name)
+            ys = dict(best_e=cur_best, accept=acc,
+                      migrated=do_mig.astype(jnp.int32))
+        else:
+            ys = None
         return dict(opt=opt, prio=prio, e=e, best_opt=best_opt,
                     best_prio=best_prio, best_e=best_e,
                     jbest_opt=jbest_opt, jbest_prio=jbest_prio,
                     jbest_sum=jbest_sum,
-                    T=state["T"] * cfg.cooling), None
+                    T=state["T"] * cfg.cooling), ys
 
-    state, _ = jax.lax.scan(step, state0, jnp.arange(cfg.iters))
+    state, ys = jax.lax.scan(step, state0, jnp.arange(cfg.iters))
+    if cfg.telemetry:
+        idx = jnp.asarray(_telemetry_steps(cfg.iters, cfg.telemetry_every))
+        mig = jnp.cumsum(ys["migrated"])[idx]                        # (S,)
+        state = dict(state,
+                     tel_best_e=ys["best_e"][idx].T,                 # (P, S)
+                     tel_accept=ys["accept"][idx].T,
+                     # replica exchange is per-tenant-vmapped but fires on
+                     # the shared sweep schedule — same count for all P
+                     tel_mig=jnp.broadcast_to(mig[None, :],
+                                              (P_n, idx.shape[0])))
     return state
 
 
@@ -886,13 +976,18 @@ def _run_sa_shared_sharded_jit(dp_arrays, dp_static, n_real, goal_w, ref_M,
                                axis_name=ac if chain_devs > 1 else None)
 
     pbj = P(None, ac)
+    out_specs = dict(opt=pbj, prio=pbj, e=P(None, ac), best_opt=pbj,
+                     best_prio=pbj, best_e=P(None, ac), jbest_opt=pbj,
+                     jbest_prio=pbj, jbest_sum=P(ac), T=P())
+    if cfg.telemetry:
+        # chain-axis collectives inside the scan make the (P, S) traces
+        # replicated across chain shards (the only sharded axis here)
+        out_specs.update(tel_best_e=P(), tel_accept=P(), tel_mig=P())
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=((P(),) * len(dp_arrays), P(), P(), P(), P(), P(), P(),
                   pbj, pbj, P()),
-        out_specs=dict(opt=pbj, prio=pbj, e=P(None, ac), best_opt=pbj,
-                       best_prio=pbj, best_e=P(None, ac), jbest_opt=pbj,
-                       jbest_prio=pbj, jbest_sum=P(ac), T=P()))
+        out_specs=out_specs)
     return fn(dp_arrays, n_real, goal_w, ref_M, ref_C, dl, dl_w,
               opt0, prio0, pkeys)
 
@@ -1027,6 +1122,7 @@ def vectorized_anneal_shared(problems: Sequence[FlatProblem], cluster: Cluster,
         off += Jp
     joint_errors = validate_schedule_many(problems, ois, starts, finishes,
                                           cluster.caps)
+    _attach_telemetry(sols, state, cfg)
     return sols, joint_errors
 
 

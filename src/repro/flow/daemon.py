@@ -61,14 +61,15 @@ from repro.core.session import (SLA_CLASSES, SLA_GUARANTEED, SLA_STANDARD,
                                 AdmissionDecision, PlanRequest, PlanResult,
                                 _normalize_request)
 from repro.obs import events as obs
-from repro.obs.aggregate import EventAggregator
+from repro.obs.aggregate import EventAggregator, finite_or_none
 from repro.obs.events import Event
 from repro.obs.sink import TagSink, TeeSink
+from repro.obs.trace import TraceIds
 
 __all__ = [
     "PoolSpec", "DaemonConfig", "DaemonStats", "LoadShedError",
     "PlannerService", "PlannerHTTPServer", "dag_to_json", "dag_from_json",
-    "plan_result_to_json", "request_from_json",
+    "plan_result_to_json", "request_from_json", "metrics_text",
 ]
 
 
@@ -220,6 +221,11 @@ class PlannerService:
             self.entries[spec.name] = _PoolEntry(spec, session)
         self.default_pool = self.cfg.pools[0].name
         self.stats_counters = DaemonStats()
+        # causal traces: every submission is stamped with a trace id at the
+        # front door; the id rides PlanRequest.trace through session /
+        # executor emissions so `obs_report --trace` can rebuild the
+        # submit -> ... -> terminal span chain per request
+        self._trace_ids = TraceIds()
         # one dedicated thread traces out-of-envelope signatures so the
         # per-pool serving executors never stall behind a compile
         self._widen_pool = ThreadPoolExecutor(
@@ -313,11 +319,13 @@ class PlannerService:
         pool = entry.spec.name
         self.sink.emit(Event(obs.DROP, ts=now_v, tenant=request.name,
                              pool=pool, sla=request.sla,
+                             trace_id=request.trace, parent=obs.SUBMIT,
                              data={"reason": reason}))
         if math.isfinite(request.deadline):
             self.sink.emit(Event(
                 obs.DEADLINE_MISS, ts=now_v, tenant=request.name,
                 pool=pool, sla=request.sla,
+                trace_id=request.trace, parent=obs.DROP,
                 data={"deadline": request.deadline, "completion": None,
                       "reason": reason, "failed": True}))
 
@@ -335,13 +343,24 @@ class PlannerService:
         request = _normalize_request(request, 0)
         entry = self._route(request, pool)
         self.stats_counters.submitted += 1
+        now_v = self._now()
+        # stamp the causal trace id BEFORE the queue-full check, so shed
+        # submissions still get a complete submit -> drop (-> miss) chain
+        if request.trace is None:
+            request = dataclasses.replace(request,
+                                          trace=self._trace_ids.next())
+        if self.sink:
+            self.sink.emit(Event(
+                obs.SUBMIT, ts=now_v, tenant=request.name,
+                pool=entry.spec.name, sla=request.sla,
+                trace_id=request.trace,
+                data={"deadline": finite_or_none(request.deadline)}))
         if len(entry.pending) >= self.cfg.max_queue:
             self.stats_counters.shed_queue += 1
             self._emit_shed(entry, request, "queue_full")
             raise LoadShedError(
                 f"pool {entry.spec.name!r}: backlog full "
                 f"({len(entry.pending)} >= {self.cfg.max_queue})")
-        now_v = self._now()
         cp_dur = 0.0
         if math.isfinite(request.deadline):
             # the same provable floor admission uses: release-aware
@@ -441,6 +460,14 @@ class PlannerService:
         setattr(self.stats_counters, f"flush_{cause}",
                 getattr(self.stats_counters, f"flush_{cause}") + 1)
         self.stats_counters.batches += 1
+        if self.sink:
+            # batch-level span: members under data["trace_ids"] (see
+            # repro.obs.trace for the two-granularity convention)
+            self.sink.emit(Event(
+                obs.FLUSH, ts=self._now(), pool=entry.spec.name,
+                data={"cause": cause, "n": len(batch),
+                      "trace_ids": [p.request.trace for p in batch
+                                    if p.request.trace]}))
         task = asyncio.create_task(
             self._dispatch(entry, batch, cause),
             name=f"dispatch-{entry.spec.name}-{self.stats_counters.batches}")
@@ -505,6 +532,7 @@ class PlannerService:
                     self.sink.emit(Event(
                         obs.DROP, ts=self._now(), tenant=p.request.name,
                         pool=pool, sla=p.request.sla,
+                        trace_id=p.request.trace, parent=obs.FLUSH,
                         data={"reason": "solve_error",
                               "error": repr(exc)}))
             for p in batch:
@@ -526,7 +554,9 @@ class PlannerService:
             self.sink.emit(Event(
                 obs.DISPATCH, ts=done_v, pool=pool,
                 data={"mode": "daemon", "cause": cause, "n": len(batch),
-                      "warm": warm, "latency_s": latencies}))
+                      "warm": warm, "latency_s": latencies,
+                      "trace_ids": [p.request.trace for p in batch
+                                    if p.request.trace]}))
             for p, res in zip(batch, results):
                 if math.isfinite(p.request.deadline):
                     completion = done_v + float(
@@ -536,6 +566,7 @@ class PlannerService:
                         obs.DEADLINE_HIT if hit else obs.DEADLINE_MISS,
                         ts=done_v, tenant=p.request.name, pool=pool,
                         sla=p.request.sla,
+                        trace_id=p.request.trace, parent=obs.DISPATCH,
                         data={"deadline": p.request.deadline,
                               "completion": completion, "failed": False}))
         if not warm and self.cfg.auto_widen and self._running:
@@ -606,6 +637,145 @@ class PlannerService:
 
 
 # ---------------------------------------------------------------------------
+# Prometheus exposition (GET /v1/metrics)
+# ---------------------------------------------------------------------------
+
+
+def _prom_escape(value: Any) -> str:
+    return (str(value).replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
+
+
+def _prom(name: str, value: Any,
+          labels: Optional[Dict[str, Any]] = None) -> Optional[str]:
+    """One sample line, or ``None`` when there is no value to expose
+    (Prometheus has no null — absent beats fabricated)."""
+    if value is None:
+        return None
+    lab = ""
+    if labels:
+        lab = ("{" + ",".join(f'{k}="{_prom_escape(v)}"'
+                              for k, v in labels.items()) + "}")
+    return f"{name}{lab} {float(value):g}"
+
+
+def _quantile_label(pkey: str) -> str:
+    # aggregator keys are "p50" / "p99"; Prometheus wants 0.5 / 0.99
+    return f"{float(pkey[1:]) / 100.0:g}"
+
+
+def metrics_text(stats: Dict[str, Any]) -> str:
+    """Render one ``PlannerService.stats()`` snapshot in the Prometheus
+    text exposition format (0.0.4) — the body of ``GET /v1/metrics``.
+
+    A pure function of the snapshot dict, so tests and offline tooling
+    render recorded snapshots without a live daemon.  Quantiles with no
+    samples yet (the aggregator's explicit ``None``s) are omitted, never
+    faked as zeros."""
+    ev_block: Dict[str, Any] = stats.get("events") or {}
+    lines: List[str] = []
+
+    def family(name: str, help_: str, type_: str,
+               samples: Sequence[Optional[str]]) -> None:
+        kept = [s for s in samples if s is not None]
+        if not kept:
+            return
+        lines.append(f"# HELP {name} {help_}")
+        lines.append(f"# TYPE {name} {type_}")
+        lines.extend(kept)
+
+    family("planner_up", "Whether the planner service is running.", "gauge",
+           [_prom("planner_up", 1.0 if stats.get("running") else 0.0)])
+    for key, help_ in (
+            ("submitted", "Requests submitted at the front door."),
+            ("served", "Requests served with a plan."),
+            ("shed_queue", "Requests shed on a full backlog."),
+            ("shed_admission", "Requests shed by admission control."),
+            ("batches", "Batches flushed to the solver."),
+            ("widen_events", "Batches that exited the warmed envelope."),
+            ("errors", "Batches whose solve raised."),
+    ):
+        family(f"planner_{key}_total", help_, "counter",
+               [_prom(f"planner_{key}_total", stats.get(key, 0))])
+    family("planner_flush_total", "Batch flushes by cause.", "counter",
+           [_prom("planner_flush_total", stats.get(f"flush_{cause}", 0),
+                  {"cause": cause})
+            for cause in ("fill", "deadline", "wait", "drain")])
+    family("planner_retraces_total",
+           "Non-warming JIT traces (zero-retrace contract violations "
+           "when > 0 inside the warmed envelope).", "counter",
+           [_prom("planner_retraces_total", ev_block.get("retraces"))])
+    family("planner_warmup_traces_total", "Warming JIT traces.", "counter",
+           [_prom("planner_warmup_traces_total",
+                  ev_block.get("warmup_traces"))])
+    family("planner_cache_hits_total", "Batches served off warmed cache "
+           "entries.", "counter",
+           [_prom("planner_cache_hits_total", ev_block.get("cache_hits"))])
+    family("planner_events_total",
+           "Observability events folded, by type.", "counter",
+           [_prom("planner_events_total", n, {"type": t})
+            for t, n in sorted((ev_block.get("counts") or {}).items())])
+    family("planner_latency_seconds",
+           "Submit-to-plan wall latency (from dispatch events).", "summary",
+           [_prom("planner_latency_seconds", v,
+                  {"quantile": _quantile_label(q)})
+            for q, v in sorted((stats.get("latency") or {}).items())])
+    deadline = ev_block.get("deadline") or {}
+    family("planner_deadline_hits_total",
+           "Finite-deadline requests that met their deadline, by declared "
+           "SLA class.", "counter",
+           [_prom("planner_deadline_hits_total", d.get("hits"), {"sla": sla})
+            for sla, d in sorted(deadline.items())])
+    family("planner_deadline_misses_total",
+           "Finite-deadline requests that missed, by declared SLA class.",
+           "counter",
+           [_prom("planner_deadline_misses_total", d.get("misses"),
+                  {"sla": sla}) for sla, d in sorted(deadline.items())])
+    family("planner_deadline_hit_rate",
+           "Deadline hit rate by declared SLA class.", "gauge",
+           [_prom("planner_deadline_hit_rate", d.get("rate"), {"sla": sla})
+            for sla, d in sorted(deadline.items())])
+    conv = ev_block.get("convergence") or {}
+    family("planner_solve_profiles_total",
+           "Per-request convergence profiles folded from solve_profile "
+           "events.", "counter",
+           [_prom("planner_solve_profiles_total", conv.get("profiles"))])
+    family("planner_convergence_steps_to_best",
+           "Annealer sweeps until the final best energy was first reached.",
+           "summary",
+           [_prom("planner_convergence_steps_to_best", v,
+                  {"quantile": _quantile_label(q)})
+            for q, v in sorted((conv.get("steps_to_best") or {}).items())])
+    family("planner_convergence_plateau_fraction",
+           "Mean fraction of sampled sweeps already at the final best "
+           "energy (high = budget wasted on a plateau).", "gauge",
+           [_prom("planner_convergence_plateau_fraction",
+                  conv.get("plateau_fraction"))])
+    family("planner_convergence_accept_decay",
+           "Mean first-to-last acceptance-rate drop across the schedule.",
+           "gauge",
+           [_prom("planner_convergence_accept_decay",
+                  conv.get("accept_decay"))])
+    pools = stats.get("pools") or {}
+    family("planner_pool_pending", "Queued submissions per pool.", "gauge",
+           [_prom("planner_pool_pending", p.get("pending"), {"pool": name})
+            for name, p in sorted(pools.items())])
+    family("planner_pool_traces_total", "JIT traces per pool session.",
+           "counter",
+           [_prom("planner_pool_traces_total", p.get("trace_count"),
+                  {"pool": name}) for name, p in sorted(pools.items())])
+    family("planner_pool_cache_hits_total",
+           "Warmed-cache hits per pool session.", "counter",
+           [_prom("planner_pool_cache_hits_total", p.get("cache_hits"),
+                  {"pool": name}) for name, p in sorted(pools.items())])
+    family("planner_pool_plans_total", "Solved batches per pool session.",
+           "counter",
+           [_prom("planner_pool_plans_total", p.get("plans"),
+                  {"pool": name}) for name, p in sorted(pools.items())])
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
 # JSON wire format (the non-Python adapter's schema)
 # ---------------------------------------------------------------------------
 
@@ -649,7 +819,8 @@ def request_from_json(obj: dict) -> PlanRequest:
         raise ValueError(f"unknown SLA class {sla!r}")
     return PlanRequest(dag=dag, sla=sla,
                        deadline=math.inf if deadline is None
-                       else float(deadline))
+                       else float(deadline),
+                       trace=obj.get("trace"))
 
 
 def plan_result_to_json(res: PlanResult) -> dict:
@@ -685,6 +856,8 @@ class PlannerHTTPServer:
       optional ``"sla"``, ``"deadline"``, ``"pool"``; 200 with the plan
       JSON, 429 when shed, 400 on malformed input.
     * ``GET /v1/stats``  — the aggregated ``PlannerService.stats()``.
+    * ``GET /v1/metrics`` — the same snapshot in Prometheus text
+      exposition format (``text/plain; version=0.0.4``), scrapable.
     * ``GET /healthz``   — liveness.
     """
 
@@ -715,13 +888,19 @@ class PlannerHTTPServer:
             status, payload = await self._respond(reader)
         except Exception as exc:  # noqa: BLE001 — wire errors -> 500
             status, payload = 500, {"error": str(exc)}
-        body = json.dumps(payload).encode()
+        if isinstance(payload, str):
+            # pre-rendered text body (the Prometheus exposition)
+            body = payload.encode()
+            ctype = "text/plain; version=0.0.4; charset=utf-8"
+        else:
+            body = json.dumps(payload).encode()
+            ctype = "application/json"
         reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
                   429: "Too Many Requests", 500: "Internal Server Error",
                   503: "Service Unavailable"}.get(status, "OK")
         writer.write(
             f"HTTP/1.1 {status} {reason}\r\n"
-            f"Content-Type: application/json\r\n"
+            f"Content-Type: {ctype}\r\n"
             f"Content-Length: {len(body)}\r\n"
             f"Connection: close\r\n\r\n".encode() + body)
         try:
@@ -730,7 +909,7 @@ class PlannerHTTPServer:
             writer.close()
 
     async def _respond(self, reader: asyncio.StreamReader
-                       ) -> Tuple[int, dict]:
+                       ) -> Tuple[int, Union[dict, str]]:
         request_line = (await reader.readline()).decode("latin-1").strip()
         if not request_line:
             return 400, {"error": "empty request"}
@@ -754,6 +933,8 @@ class PlannerHTTPServer:
             return 200, {"ok": True, "running": self.service._running}
         if method == "GET" and path == "/v1/stats":
             return 200, self.service.stats()
+        if method == "GET" and path == "/v1/metrics":
+            return 200, metrics_text(self.service.stats())
         if method == "POST" and path == "/v1/plan":
             if not self.service._running:
                 return 503, {"error": "service not running"}

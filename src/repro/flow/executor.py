@@ -34,6 +34,7 @@ from repro.core.agora import Agora, Plan
 from repro.core.session import PlanRequest
 from repro.obs import events as obs
 from repro.obs.events import Event
+from repro.obs.trace import TraceIds
 
 
 @dataclasses.dataclass
@@ -431,6 +432,10 @@ class MultiTenantRunner:
         self.sink = self.session.sink
         self.rounds: List[int] = []      # batch size per planning round
         self.events: List[str] = []
+        # causal traces (schema v2): one id per tenant submission, keyed
+        # by tenant name; rides PlanRequest.trace into session emissions
+        self._trace_ids = TraceIds()
+        self._traces: Dict[str, str] = {}
 
     # ------------------------------------------------------------------
 
@@ -445,6 +450,14 @@ class MultiTenantRunner:
 
     def run(self) -> List[TenantRecord]:
         pending = list(self.dags)
+        self._traces = {d.name: self._trace_ids.next() for d in self.dags}
+        if self.sink:
+            # one submit root per tenant at its release instant — the
+            # anchor of the causal chain its later events continue
+            for d in self.dags:
+                self.sink.emit(Event(
+                    obs.SUBMIT, ts=d.release_time, tenant=d.name,
+                    trace_id=self._traces[d.name], data={}))
         submitted = {d.name: d.release_time for d in self.dags}
         plan_attempts: Dict[str, int] = {}
         records: List[TenantRecord] = []
@@ -460,7 +473,8 @@ class MultiTenantRunner:
             # re-anchor each tenant's plan at the round start
             now_dags = [dataclasses.replace(d, release_time=0.0) for d in batch]
             plans = [r.plan for r in self.session.plan(
-                [PlanRequest(dag=d) for d in now_dags])]
+                [PlanRequest(dag=d, trace=self._traces.get(d.name))
+                 for d in now_dags])]
             self.rounds.append(len(batch))
             self.events.append(
                 f"[t={clock:9.1f}] round {len(self.rounds)}: planned "
@@ -484,6 +498,8 @@ class MultiTenantRunner:
                     if self.sink:
                         self.sink.emit(Event(
                             obs.DROP, ts=clock, tenant=dag.name,
+                            trace_id=self._traces.get(dag.name),
+                            parent=obs.SUBMIT,
                             data={"reason": "invalid_plan", "rounds": n}))
                     records.append(TenantRecord(
                         name=dag.name, submitted=submitted[dag.name],
@@ -511,7 +527,8 @@ class MultiTenantRunner:
                 good = list(zip(
                     [d for d, _ in good],
                     [r.plan for r in self.session.plan(
-                        [PlanRequest(dag=d) for d in redo])]))
+                        [PlanRequest(dag=d, trace=self._traces.get(d.name))
+                         for d in redo])]))
                 self.events.append(
                     f"[t={clock:9.1f}] re-planned {len(good)} valid tenants "
                     f"after excluding {len(bad)}")
@@ -546,7 +563,9 @@ class MultiTenantRunner:
             self.sink.emit(Event(
                 obs.DISPATCH, ts=clock,
                 data={"mode": "isolated", "n": len(good),
-                      "tenants": [d.name for d, _ in good]}))
+                      "tenants": [d.name for d, _ in good],
+                      "trace_ids": [self._traces[d.name] for d, _ in good
+                                    if d.name in self._traces]}))
         completion = clock
         for k, (dag, plan) in enumerate(good):
             res = FlowRunner(plan,
@@ -571,7 +590,9 @@ class MultiTenantRunner:
             self.sink.emit(Event(
                 obs.DISPATCH, ts=clock,
                 data={"mode": "shared", "n": len(good),
-                      "tenants": [d.name for d, _ in good]}))
+                      "tenants": [d.name for d, _ in good],
+                      "trace_ids": [self._traces[d.name] for d, _ in good
+                                    if d.name in self._traces]}))
         joint = combine_plans([plan for _, plan in good])
         # planned starts gate launches: the joint schedule's staggering IS
         # the capacity arbitration, so the executor must honor it

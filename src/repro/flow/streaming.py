@@ -54,6 +54,7 @@ from repro.flow.executor import (FlowConfig, FlowResult, FlowRunner,
 from repro.obs import events as obs
 from repro.obs.aggregate import finite_or_none
 from repro.obs.events import Event
+from repro.obs.trace import TraceIds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +175,7 @@ class _TenantState:
     admission_checked: bool = False
     declared_sla: str = ""             # original class (survives downgrade)
     declared_deadline: float = math.nan
+    trace: Optional[str] = None        # causal trace id (schema v2)
 
     def __post_init__(self):
         if not self.declared_sla:
@@ -224,6 +226,9 @@ class StreamingRunner(MultiTenantRunner):
         self.requests = requests
         self.preempt_events = 0
         self.arrival_replans = 0
+        # causal traces: each tenant is stamped at arrival; the id rides
+        # its PlanRequests and every per-tenant event across rounds
+        self._trace_ids = TraceIds()
         # (round_clock, [(tenant_name, plan)], FlowResult) per dispatch —
         # the audit trail the capacity gates sweep
         self.dispatches: List[Tuple[float, List[Tuple[str, Plan]],
@@ -252,7 +257,8 @@ class StreamingRunner(MultiTenantRunner):
         requests = [PlanRequest(dag=s.remainder_dag(),
                                 goal=sla_goal(s.req, self.agora.goal, clock,
                                               sc),
-                                sla=s.req.sla, deadline=s.req.deadline)
+                                sla=s.req.sla, deadline=s.req.deadline,
+                                trace=s.trace)
                     for s in batch]
         return [r.plan for r in self.session.plan(requests,
                                                   capacity=caps_round)]
@@ -305,9 +311,18 @@ class StreamingRunner(MultiTenantRunner):
         sc = self.stream
         states = [
             _TenantState(req=r, remaining=list(range(r.dag.num_tasks)),
-                         ready_at=r.submit)
+                         ready_at=r.submit, trace=self._trace_ids.next())
             for r in self.requests
         ]
+        if self.sink:
+            # one submit root per tenant at its arrival instant — the
+            # anchor of its causal chain (ts on the virtual clock, like
+            # every other control-plane event)
+            for s in states:
+                self.sink.emit(Event(
+                    obs.SUBMIT, ts=s.req.submit, tenant=s.name,
+                    sla=s.declared_sla, trace_id=s.trace,
+                    data={"deadline": finite_or_none(s.req.deadline)}))
         pending: List[_TenantState] = list(states)
         records: List[StreamRecord] = []
         self._executed: List[Tuple[float, float, np.ndarray]] = []
@@ -373,6 +388,7 @@ class StreamingRunner(MultiTenantRunner):
                             self.sink.emit(Event(
                                 obs.DROP, ts=clock, tenant=s.name,
                                 sla=s.declared_sla,
+                                trace_id=s.trace, parent=obs.SUBMIT,
                                 data={"reason": "admission_rejected"}))
                         records.append(self._record(s, math.inf, failed=True))
             # capacity-fragmentation guard: a tenant none of whose options
@@ -427,6 +443,7 @@ class StreamingRunner(MultiTenantRunner):
                                 self.sink.emit(Event(
                                     obs.DROP, ts=clock, tenant=s.name,
                                     sla=s.declared_sla,
+                                    trace_id=s.trace, parent=obs.SUBMIT,
                                     data={"reason": "invalid_plan",
                                           "rounds": s.plan_retries}))
                             records.append(
@@ -476,6 +493,7 @@ class StreamingRunner(MultiTenantRunner):
                             self.sink.emit(Event(
                                 obs.PREEMPT, ts=clock, tenant=victim.name,
                                 sla=victim.declared_sla,
+                                trace_id=victim.trace, parent=obs.SUBMIT,
                                 data={"reason": "deadline_risk",
                                       "at_risk": [s.name for s in risky],
                                       "backoff": delay}))
@@ -507,6 +525,7 @@ class StreamingRunner(MultiTenantRunner):
                                     self.sink.emit(Event(
                                         obs.DEFER, ts=clock, tenant=s.name,
                                         sla=s.declared_sla,
+                                        trace_id=s.trace, parent=obs.SUBMIT,
                                         data={"until": residue_next,
                                               "deferrals": s.deferrals}))
                                 self.events.append(
@@ -552,6 +571,8 @@ class StreamingRunner(MultiTenantRunner):
                     obs.DISPATCH, ts=clock,
                     data={"mode": "stream", "n": len(good),
                           "tenants": [s.name for s, _ in good],
+                          "trace_ids": [s.trace for s, _ in good
+                                        if s.trace],
                           "tasks": sum(p.problem.num_tasks
                                        for _, p in good),
                           "horizon": finite_or_none(horizon),
@@ -717,7 +738,8 @@ class StreamingRunner(MultiTenantRunner):
             self.sink.emit(Event(
                 obs.DEADLINE_HIT if rec.deadline_met else obs.DEADLINE_MISS,
                 ts=getattr(self, "_clock", 0.0), tenant=rec.name,
-                sla=rec.sla,
+                sla=rec.sla, trace_id=s.trace,
+                parent=obs.DROP if rec.failed else obs.DISPATCH,
                 data={"deadline": finite_or_none(rec.deadline),
                       "completion": finite_or_none(rec.finished),
                       "failed": rec.failed,

@@ -7,14 +7,20 @@ e.g. ``serve_planner --events events.jsonl``) and/or benchmark artifacts
   PYTHONPATH=src python -m repro.launch.obs_report events.jsonl
   PYTHONPATH=src python -m repro.launch.obs_report \
       benchmarks/baselines/BENCH_streaming.json --json
+  PYTHONPATH=src python -m repro.launch.obs_report events.jsonl --traces
+  PYTHONPATH=src python -m repro.launch.obs_report events.jsonl \
+      --trace <trace-id>
 
 Event streams go through the SAME ``EventAggregator`` fold the daemon's
 ``/v1/stats`` and the ``bench_streaming`` / ``bench_daemon`` gates use,
 so the report, the serving endpoint, and the benchmark accounting cannot
-drift apart.  A missing input is a loud failure (exit
-``MISSING_ARTIFACT = 4`` from ``repro.obs.artifacts``, shared with
-``benchmarks/compare_bench.py``) — a report over nothing must never read
-as a healthy system.
+drift apart.  ``--trace`` renders one request's causal span timeline
+(submit -> admit -> flush -> solve -> dispatch -> terminal verdict) from
+the schema-v2 ``trace_id`` / ``parent`` fields; ``--traces`` lists every
+trace id in the stream with its completeness verdict.  A missing input is
+a loud failure (exit ``MISSING_ARTIFACT = 4`` from
+``repro.obs.artifacts``, shared with ``benchmarks/compare_bench.py``) — a
+report over nothing must never read as a healthy system.
 """
 from __future__ import annotations
 
@@ -22,18 +28,24 @@ import argparse
 import json
 import math
 import os
-from typing import Any, Dict
+from typing import Any, Dict, List
 
 from repro.obs.aggregate import EventAggregator
 from repro.obs.artifacts import load_artifact, missing_artifact
-from repro.obs.events import read_jsonl
+from repro.obs.events import Event, read_jsonl
+from repro.obs.trace import chain_complete, render_trace, spans, trace_ids
+
+
+def load_events(path: str) -> List[Event]:
+    """Read one JSONL event stream fully (loud on a missing file)."""
+    if not os.path.exists(path):
+        raise missing_artifact(path, role="event stream")
+    return list(read_jsonl(path))
 
 
 def fold_events(path: str) -> Dict[str, Any]:
     """Fold one JSONL event stream into the aggregator snapshot."""
-    if not os.path.exists(path):
-        raise missing_artifact(path, role="event stream")
-    return EventAggregator.fold(read_jsonl(path)).snapshot()
+    return EventAggregator.fold(load_events(path)).snapshot()
 
 
 def _fmt(x, unit: str = "") -> str:
@@ -55,9 +67,17 @@ def render_events(path: str, snap: Dict[str, Any]) -> None:
         print(f"  sla={sla}: hit rate {d['rate']:.3f} "
               f"({d['hits']} hit / {d['misses']} missed)")
     lat = snap["latency"]
-    if not math.isnan(lat.get("p50", math.nan)):
+    if lat.get("p50") is not None:
         print(f"  submit-to-plan latency: p50 {lat['p50'] * 1e3:.0f}ms  "
               f"p99 {lat['p99'] * 1e3:.0f}ms")
+    conv = snap.get("convergence") or {}
+    if conv.get("profiles"):
+        stb = conv.get("steps_to_best") or {}
+        print(f"  convergence ({conv['profiles']} profiles): "
+              f"steps-to-best p50 {_fmt(stb.get('p50'))} "
+              f"p99 {_fmt(stb.get('p99'))}  "
+              f"plateau {_fmt(conv.get('plateau_fraction'))}  "
+              f"accept decay {_fmt(conv.get('accept_decay'))}")
     if snap["headroom"] is not None:
         head = ", ".join(f"{h:.3f}" for h in snap["headroom"])
         print(f"  realized capacity headroom (min over audits): [{head}]")
@@ -66,6 +86,17 @@ def render_events(path: str, snap: Dict[str, Any]) -> None:
         print(f"  pool={pool}: "
               + " ".join(f"{k}={v}" for k, v in c.items()))
     print(f"  tenants with terminal verdicts: {snap['tenants']}")
+
+
+def render_trace_list(path: str, events: List[Event]) -> None:
+    ids = trace_ids(events)
+    print(f"== traces in {path}: {len(ids)} ==")
+    for tid in ids:
+        chain = spans(events, tid)
+        who = next((e.tenant for e in chain if e.tenant), "-")
+        verdict = "complete" if chain_complete(chain) else "INCOMPLETE"
+        print(f"  {tid}  {verdict:<10}  {len(chain)} spans  "
+              f"tenant={who}  [{' -> '.join(e.type for e in chain)}]")
 
 
 def render_bench(path: str, art: Dict[str, Any]) -> None:
@@ -87,6 +118,10 @@ def render_bench(path: str, art: Dict[str, Any]) -> None:
               f"p50 {_fmt(d.get('p50_ms'), 'ms')}, "
               f"p99 {_fmt(d.get('p99_ms'), 'ms')}, "
               f"retraces after warmup {d.get('retrace_after_warmup')}")
+    ov = art.get("overhead") or {}
+    if ov:
+        print(f"  observability overhead: {_fmt(ov.get('overhead_pct'))}% "
+              f"steady-state (gate < {_fmt(ov.get('gate_pct'))}%)")
     ev = art.get("events")
     if ev:
         print("  event-derived mirror (gated == post-hoc inside the bench):")
@@ -104,7 +139,24 @@ def main(argv=None) -> int:
     ap.add_argument("--json", action="store_true",
                     help="emit one machine-readable JSON object instead of "
                          "the human report")
+    ap.add_argument("--trace", metavar="ID",
+                    help="render the causal span timeline of ONE trace id "
+                         "from the given event stream(s)")
+    ap.add_argument("--traces", action="store_true",
+                    help="list every trace id in the event stream(s) with "
+                         "its chain-completeness verdict")
     args = ap.parse_args(argv)
+    if args.trace or args.traces:
+        streams = [p for p in args.paths if p.endswith(".jsonl")]
+        if not streams:
+            ap.error("--trace/--traces need at least one *.jsonl stream")
+        for path in streams:
+            events = load_events(path)
+            if args.traces:
+                render_trace_list(path, events)
+            if args.trace:
+                print(render_trace(events, args.trace))
+        return 0
     out: Dict[str, Any] = {}
     for path in args.paths:
         if path.endswith(".jsonl"):

@@ -73,6 +73,11 @@ async def _serve(args) -> None:
         finally:
             await http.stop()
             sink.close()
+    dropped = getattr(sink, "dropped", 0)
+    if dropped:
+        # the tape is short: events raced shutdown and missed the file
+        print(f"WARNING: {dropped} event(s) dropped after the event "
+              f"stream closed — {args.events} is incomplete", flush=True)
 
 
 def main(argv=None) -> None:

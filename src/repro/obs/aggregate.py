@@ -40,6 +40,17 @@ def finite_or_none(x) -> Optional[float]:
     return x if math.isfinite(x) else None
 
 
+def percentile(sorted_values: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy's default) over an already
+    sorted non-empty sequence — stdlib-only so the docs/report path needs
+    no array stack."""
+    pos = (len(sorted_values) - 1) * q / 100.0
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(sorted_values) - 1)
+    return sorted_values[lo] + (sorted_values[hi] - sorted_values[lo]) \
+        * (pos - lo)
+
+
 class EventAggregator(Sink):
     """Streaming fold of the event plane (thread-safe; the daemon's pools
     emit into one aggregator concurrently)."""
@@ -61,6 +72,9 @@ class EventAggregator(Sink):
         # tenant -> terminal verdict (exactly one per tenant when the
         # emitting layer honors its exactly-once contract)
         self.tenants: Dict[str, Dict[str, Any]] = {}
+        # per-request convergence roll-ups from solve_profile events
+        # (schema v2): the raw material of convergence_stats()
+        self.profiles: List[Dict[str, Any]] = []
 
     # -- Sink ----------------------------------------------------------
 
@@ -107,6 +121,10 @@ class EventAggregator(Sink):
                     "completion": e.data.get("completion"),
                     "reason": e.data.get("reason"),
                 }
+        elif e.type == ev.SOLVE_PROFILE:
+            self.profiles.extend(dict(p) for p in e.data.get("profiles", ()))
+            if pool is not None:
+                pool["solve_profiles"] += 1
         elif e.type == ev.CAPACITY_VIOLATION:
             self.violations += 1
         elif e.type == ev.CAPACITY_AUDIT:
@@ -137,21 +155,38 @@ class EventAggregator(Sink):
         return h / (h + m) if (h + m) else 1.0
 
     def latency_percentiles(self, qs: Sequence[float] = (50.0, 99.0)
-                            ) -> Dict[str, float]:
+                            ) -> Dict[str, Optional[float]]:
         """Submit-to-plan wall-latency percentiles (seconds) from daemon
-        ``dispatch`` events; NaN before any traffic."""
+        ``dispatch`` events. Before any traffic there is no sample to take
+        a percentile of: every quantile is an explicit ``None`` (JSON
+        ``null``) — never a fabricated number."""
         with self._lock:
             lat = sorted(self.latencies)
         if not lat:
-            return {f"p{q:g}": math.nan for q in qs}
-        # linear-interpolated percentile (numpy's default), stdlib-only so
-        # the docs/report path needs no array stack
-        def pct(q: float) -> float:
-            pos = (len(lat) - 1) * q / 100.0
-            lo = int(math.floor(pos))
-            hi = min(lo + 1, len(lat) - 1)
-            return lat[lo] + (lat[hi] - lat[lo]) * (pos - lo)
-        return {f"p{q:g}": pct(q) for q in qs}
+            return {f"p{q:g}": None for q in qs}
+        return {f"p{q:g}": percentile(lat, q) for q in qs}
+
+    def convergence_stats(self, qs: Sequence[float] = (50.0, 99.0)
+                          ) -> Dict[str, Any]:
+        """Roll-up of the per-request ``solve_profile`` payloads: where the
+        annealer's step budget actually went. ``None``s (not zeros) when no
+        telemetry-bearing solve has been seen."""
+        with self._lock:
+            profiles = list(self.profiles)
+        out: Dict[str, Any] = {"profiles": len(profiles)}
+        if not profiles:
+            out["steps_to_best"] = {f"p{q:g}": None for q in qs}
+            out["plateau_fraction"] = None
+            out["accept_decay"] = None
+            return out
+        stb = sorted(float(p["steps_to_best"]) for p in profiles)
+        out["steps_to_best"] = {f"p{q:g}": percentile(stb, q) for q in qs}
+        out["plateau_fraction"] = (
+            sum(float(p["plateau_fraction"]) for p in profiles)
+            / len(profiles))
+        out["accept_decay"] = (
+            sum(float(p["accept_decay"]) for p in profiles) / len(profiles))
+        return out
 
     def snapshot(self) -> Dict[str, Any]:
         """One JSON-able roll-up: what ``/v1/stats`` serves under
@@ -171,6 +206,7 @@ class EventAggregator(Sink):
                 "violations": self.violations,
                 "headroom": self.headroom,
                 "latency": self.latency_percentiles(),
+                "convergence": self.convergence_stats(),
                 "pools": {name: dict(sorted(c.items()))
                           for name, c in sorted(self.pools.items())},
                 "tenants": len(self.tenants),

@@ -25,7 +25,11 @@ import dataclasses
 import json
 from typing import Any, Dict, Iterator, Mapping, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# older wire versions the reader still folds correctly: v1 events are a
+# strict subset of v2 (no trace_id/parent, no solve_profile type), so a
+# v1 tape reads as v2 with null causal fields. Anything else is foreign.
+SUPPORTED_SCHEMAS = frozenset({1, SCHEMA_VERSION})
 
 # event vocabulary (see docs/events.md for the per-type reference):
 #   solver / session layer
@@ -33,6 +37,7 @@ PLAN_SOLVED = "plan_solved"            # one live engine dispatch served
 BUCKET_TRACED = "bucket_traced"        # a batch added a JIT cache entry
 CACHE_HIT = "cache_hit"                # a batch rode the live cache entry
 ADMISSION_DECISION = "admission_decision"  # session.admit verdict
+SOLVE_PROFILE = "solve_profile"        # in-solve convergence telemetry
 #   control plane / executor layer
 DISPATCH = "dispatch"                  # a planned batch handed to execution
 DEFER = "defer"                        # at-risk tenant waits for residue
@@ -44,11 +49,14 @@ DEADLINE_HIT = "deadline_hit"          # terminal per-tenant verdict
 DEADLINE_MISS = "deadline_miss"        # terminal per-tenant verdict
 #   serving daemon layer
 ENVELOPE_WIDENED = "envelope_widened"  # batch exited the warmed envelope
+SUBMIT = "submit"                      # request accepted at the front door
+FLUSH = "flush"                        # a queued batch left for the solve
 
 EVENT_TYPES = (
     PLAN_SOLVED, BUCKET_TRACED, CACHE_HIT, ADMISSION_DECISION,
+    SOLVE_PROFILE,
     DISPATCH, DEFER, PREEMPT, DROP, CAPACITY_VIOLATION, CAPACITY_AUDIT,
-    DEADLINE_HIT, DEADLINE_MISS, ENVELOPE_WIDENED,
+    DEADLINE_HIT, DEADLINE_MISS, ENVELOPE_WIDENED, SUBMIT, FLUSH,
 )
 
 
@@ -63,6 +71,11 @@ class Event:
       plane's / daemon's virtual clock for flow events, ``time.monotonic``
       for session-level solver events — see docs/events.md);
     * ``tenant`` / ``pool`` / ``sla`` — identity, where meaningful;
+    * ``trace_id`` / ``parent`` — causal thread (schema v2): ``trace_id``
+      groups every event one request caused across daemon → session →
+      executor; ``parent`` names the preceding span in that thread (the
+      emitting layer's view of what it continued from), ``null`` at the
+      root. v1 events carry neither and read back as ``None``;
     * ``schema`` — wire-format version (``SCHEMA_VERSION``).
 
     ``data`` carries the event-type-specific payload and must stay
@@ -75,6 +88,8 @@ class Event:
     sla: Optional[str] = None
     data: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     schema: int = SCHEMA_VERSION
+    trace_id: Optional[str] = None
+    parent: Optional[str] = None
 
     def __post_init__(self):
         if self.type not in EVENT_TYPES:
@@ -84,18 +99,21 @@ class Event:
     def to_json(self) -> Dict[str, Any]:
         return {"schema": self.schema, "type": self.type, "ts": self.ts,
                 "tenant": self.tenant, "pool": self.pool, "sla": self.sla,
+                "trace_id": self.trace_id, "parent": self.parent,
                 "data": dict(self.data)}
 
 
 def event_from_json(obj: Mapping[str, Any]) -> Event:
     schema = int(obj.get("schema", 0))
-    if schema != SCHEMA_VERSION:
-        raise ValueError(f"event schema {schema} != supported "
-                         f"{SCHEMA_VERSION}; refusing to misread the stream")
+    if schema not in SUPPORTED_SCHEMAS:
+        raise ValueError(f"event schema {schema} not in supported "
+                         f"{sorted(SUPPORTED_SCHEMAS)}; refusing to misread "
+                         f"the stream")
     return Event(type=obj["type"], ts=float(obj["ts"]),
                  tenant=obj.get("tenant"), pool=obj.get("pool"),
                  sla=obj.get("sla"), data=dict(obj.get("data") or {}),
-                 schema=schema)
+                 schema=schema, trace_id=obj.get("trace_id"),
+                 parent=obj.get("parent"))
 
 
 def read_jsonl(path: str) -> Iterator[Event]:

@@ -90,11 +90,16 @@ class JsonlSink(Sink):
         self._lock = threading.Lock()
         self._flush_every = max(int(flush_every), 1)
         self._since_flush = 0
+        # events that arrived after close() — e.g. a daemon pool racing
+        # shutdown. They are dropped (the file is gone) but COUNTED, so
+        # operators can see the tape is short rather than trust it blindly.
+        self.dropped = 0
 
     def emit(self, event: Event) -> None:
         line = json.dumps(event.to_json())
         with self._lock:
             if self._f.closed:
+                self.dropped += 1
                 return
             self._f.write(line + "\n")
             self._since_flush += 1

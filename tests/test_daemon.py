@@ -245,6 +245,24 @@ async def _http(host, port, method, path, body=None):
     return status, json.loads(data)
 
 
+async def _http_raw(host, port, path):
+    """GET returning (status, content-type, body text) — for the
+    non-JSON ``/v1/metrics`` exposition."""
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
+                 f"Content-Length: 0\r\n\r\n".encode())
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, data = raw.partition(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    ctype = ""
+    for line in head.decode("latin-1").split("\r\n"):
+        if line.lower().startswith("content-type:"):
+            ctype = line.split(":", 1)[1].strip()
+    return status, ctype, data.decode()
+
+
 def test_http_adapter_end_to_end():
     svc = _service(max_wait_s=0.2)
     svc.warmup(_chain_dag("tmpl"), max_p=2)
@@ -259,11 +277,12 @@ def test_http_adapter_end_to_end():
             bad = await _http(host, port, "POST", "/v1/plan",
                               {"dag": {"oops": True}})
             stats = await _http(host, port, "GET", "/v1/stats")
+            metrics = await _http_raw(host, port, "/v1/metrics")
             lost = await _http(host, port, "GET", "/nope")
             await http.stop()
-            return ok, plan, bad, stats, lost
+            return ok, plan, bad, stats, metrics, lost
 
-    ok, plan, bad, stats, lost = asyncio.run(drive())
+    ok, plan, bad, stats, metrics, lost = asyncio.run(drive())
     assert ok == (200, {"ok": True, "running": True})
     assert plan[0] == 200
     assert plan[1]["errors"] == [] and plan[1]["makespan"] > 0
@@ -272,4 +291,13 @@ def test_http_adapter_end_to_end():
     assert bad[0] == 400 and "malformed" in bad[1]["error"]
     assert stats[0] == 200 and stats[1]["served"] == 1
     assert "shared" in stats[1]["pools"]
+    # the Prometheus exposition is the SAME snapshot, scrapable as text
+    mstatus, mctype, mtext = metrics
+    assert mstatus == 200
+    assert mctype == "text/plain; version=0.0.4; charset=utf-8"
+    assert "# TYPE planner_up gauge\nplanner_up 1" in mtext
+    assert "planner_submitted_total 1" in mtext
+    assert "planner_served_total 1" in mtext
+    assert 'planner_latency_seconds{quantile="0.5"}' in mtext
+    assert 'planner_pool_plans_total{pool="shared"}' in mtext
     assert lost[0] == 404

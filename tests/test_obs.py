@@ -2,8 +2,14 @@
 
 The contracts the docs promise (docs/events.md):
 
-* wire schema v1 round-trips through JSON / JSON-lines bit-for-bit, and a
-  reader refuses streams from a different schema version;
+* wire schema v2 round-trips through JSON / JSON-lines bit-for-bit, a
+  committed v1 golden tape still folds identically, and the reader
+  refuses streams from a foreign schema version;
+* causal traces reconstruct per-request span chains across both event
+  granularities, and ``chain_complete`` gates on submit-root + terminal;
+* ``VecConfig.telemetry`` off is bit-identical to on (pure extra
+  outputs), on attaches ``ConvergenceTrace``s and emits ``solve_profile``
+  exactly once per solve with zero warm-bucket retraces;
 * the disabled sink is FALSY and free — plans served with no sink are
   bit-for-bit identical to plans served with a recording sink;
 * terminal ``deadline_hit`` / ``deadline_miss`` events are exactly-once
@@ -15,7 +21,10 @@ The contracts the docs promise (docs/events.md):
 * the daemon's ``/v1/stats`` ``events`` block is that same aggregator.
 """
 import asyncio
+import dataclasses
+import json
 import math
+import os
 
 import numpy as np
 import pytest
@@ -26,16 +35,20 @@ from repro.core.dag import DAG, Task, TaskOption
 from repro.core.objectives import Goal
 from repro.core.session import SLA_GUARANTEED, PlanRequest
 from repro.core.vectorized import VecConfig
-from repro.flow.daemon import DaemonConfig, PlannerService, PoolSpec
+from repro.flow.daemon import (DaemonConfig, PlannerService, PoolSpec,
+                               metrics_text)
 from repro.flow.executor import FlowConfig
 from repro.flow.streaming import (SLA_BEST_EFFORT, StreamConfig,
                                   StreamingRunner, TenantRequest,
                                   deadline_hit_rate)
 from repro.obs import events as ev
-from repro.obs.aggregate import EventAggregator, finite_or_none
+from repro.obs.aggregate import (EventAggregator, finite_or_none,
+                                 percentile)
 from repro.obs.events import Event, event_from_json, read_jsonl
 from repro.obs.sink import (NULL, JsonlSink, NullSink, RingSink, TagSink,
                             TeeSink, replay)
+from repro.obs.trace import (TraceIds, chain_complete, render_trace, spans,
+                             trace_ids)
 
 CFG = VecConfig(chains=8, iters=40, grid=64, seed=0)
 
@@ -156,19 +169,24 @@ def test_jsonl_roundtrip_and_fold_matches_live(tmp_path):
     assert live.headroom == [0.5, 1.0]
     lat = live.latency_percentiles()
     assert lat["p50"] == pytest.approx(0.2)
-    assert EventAggregator().latency_percentiles()["p50"] is not None  # NaN
-    assert math.isnan(EventAggregator().latency_percentiles()["p50"])
+    # an empty stream has NO latency distribution: explicit None, not NaN
+    empty = EventAggregator().latency_percentiles()
+    assert empty == {"p50": None, "p99": None}
 
 
-def test_closed_jsonl_sink_drops_late_events(tmp_path):
+def test_closed_jsonl_sink_drops_late_events_but_counts_them(tmp_path):
     """Close races late emissions in a draining daemon — a closed file
-    sink drops silently instead of crashing the serving thread."""
+    sink drops instead of crashing the serving thread, but COUNTS every
+    dropped event so the operator learns the tape is incomplete."""
     path = tmp_path / "e.jsonl"
     sink = JsonlSink(str(path))
     sink.emit(Event(type=ev.CACHE_HIT, ts=0.0))
+    assert sink.dropped == 0
     sink.close()
     sink.emit(Event(type=ev.CACHE_HIT, ts=1.0))
+    sink.emit(Event(type=ev.CACHE_HIT, ts=2.0))
     assert len(list(read_jsonl(str(path)))) == 1
+    assert sink.dropped == 2
 
 
 # ---------------------------------------------------------------------------
@@ -300,4 +318,216 @@ def test_daemon_stats_events_block_is_the_aggregator():
     assert snap["warmup_traces"] + snap["cache_hits"] > 0
     # /v1/stats latency percentiles ARE the aggregator's
     assert st["latency"]["p50"] == svc.aggregator.latency_percentiles()["p50"]
-    assert not math.isnan(st["latency"]["p50"])
+    assert st["latency"]["p50"] is not None
+
+
+# ---------------------------------------------------------------------------
+# schema versioning: a committed v1 tape must keep folding under v2
+
+GOLDEN_V1 = os.path.join(os.path.dirname(__file__), "golden",
+                         "events_v1.jsonl")
+
+
+def test_v1_golden_tape_folds_identically_under_v2_reader():
+    """The versioning policy, applied: v1 events are a strict subset of
+    v2, so the committed v1 tape reads back with ``None`` causal fields
+    and folds to the SAME snapshot as the equivalent v2 events."""
+    tape = list(read_jsonl(GOLDEN_V1))
+    assert tape and all(e.schema == 1 for e in tape)
+    assert all(e.trace_id is None and e.parent is None for e in tape)
+    v2 = [Event(type=e.type, ts=e.ts, tenant=e.tenant, pool=e.pool,
+                sla=e.sla, data=e.data) for e in tape]
+    old, new = EventAggregator.fold(tape), EventAggregator.fold(v2)
+    # snapshots differ ONLY in the schema stamp (both report v2's fold)
+    assert old.snapshot() == new.snapshot()
+    assert (old.retraces, old.warmup_traces, old.cache_hits) == (1, 1, 1)
+    assert old.hit_counts("guaranteed") == (1, 1)
+    assert old.latency_percentiles()["p50"] == pytest.approx(0.2)
+    assert old.headroom == [0.5, 1.0]
+
+
+def test_foreign_schema_line_in_a_tape_is_refused_loudly(tmp_path):
+    path = tmp_path / "future.jsonl"
+    line = Event(type=ev.CACHE_HIT, ts=0.0).to_json()
+    line["schema"] = 99
+    path.write_text(json.dumps(line) + "\n")
+    with pytest.raises(ValueError, match="schema 99"):
+        list(read_jsonl(str(path)))
+
+
+# ---------------------------------------------------------------------------
+# causal traces (schema v2): ids, span merge, completeness gate
+
+
+def test_trace_ids_are_unique_monotonic_and_prefixed():
+    ids = TraceIds(prefix="cafe0123")
+    assert ids.next() == "cafe0123-0000"
+    assert ids.next() == "cafe0123-0001"
+    other = TraceIds()
+    assert other.next() != "cafe0123-0000"   # fresh lifetime, fresh prefix
+
+
+def _trace_stream(t):
+    """One request's life plus an unrelated event, deliberately shuffled
+    across both granularities (per-request stamps + batch membership)."""
+    return [
+        Event(type=ev.SUBMIT, ts=0.0, tenant="a", trace_id=t,
+              data={"deadline": 9.0}),
+        Event(type=ev.ADMISSION_DECISION, ts=1.0, tenant="a", trace_id=t,
+              parent=ev.SUBMIT, data={"admitted": True}),
+        Event(type=ev.CACHE_HIT, ts=1.5, pool="shared"),   # not ours
+        Event(type=ev.FLUSH, ts=2.0, pool="shared",
+              data={"cause": "fill", "n": 1, "trace_ids": [t]}),
+        Event(type=ev.DISPATCH, ts=3.0, pool="shared",
+              data={"latency_s": [0.5], "trace_ids": [t]}),
+        Event(type=ev.DEADLINE_HIT, ts=4.0, tenant="a", trace_id=t,
+              parent=ev.DISPATCH, data={"deadline": 9.0, "completion": 4.0}),
+    ]
+
+
+def test_trace_spans_merge_both_granularities_in_order():
+    t = "cafe0123-0000"
+    stream = _trace_stream(t)
+    assert trace_ids(stream) == [t]
+    chain = spans(stream, t)
+    assert [e.type for e in chain] == [
+        ev.SUBMIT, ev.ADMISSION_DECISION, ev.FLUSH, ev.DISPATCH,
+        ev.DEADLINE_HIT]
+    assert chain_complete(chain)
+    # no submit root, or no terminal span yet -> incomplete
+    assert not chain_complete(chain[1:])
+    assert not chain_complete(chain[:3])
+    out = render_trace(stream, t)
+    assert out.startswith(f"trace {t} (complete, 5 spans)")
+    assert ev.DEADLINE_HIT in out and "cause=fill" in out
+
+
+def test_trace_roundtrips_the_jsonl_wire(tmp_path):
+    t = "cafe0123-0007"
+    path = tmp_path / "t.jsonl"
+    with JsonlSink(str(path)) as sink:
+        replay(_trace_stream(t), sink)
+    back = list(read_jsonl(str(path)))
+    assert back[0].trace_id == t and back[0].parent is None
+    assert back[1].parent == ev.SUBMIT
+    assert chain_complete(spans(back, t))
+
+
+def test_shed_request_chain_is_complete():
+    """A request shed at the front door still gets a complete chain:
+    submit -> drop -> deadline_miss (the daemon stamps the trace BEFORE
+    the queue-full check)."""
+    t = "cafe0123-0002"
+    chain = [
+        Event(type=ev.SUBMIT, ts=0.0, tenant="a", trace_id=t),
+        Event(type=ev.DROP, ts=0.0, tenant="a", trace_id=t,
+              parent=ev.SUBMIT, data={"reason": "queue_full"}),
+        Event(type=ev.DEADLINE_MISS, ts=0.0, tenant="a", trace_id=t,
+              parent=ev.DROP, data={"deadline": 5.0}),
+    ]
+    assert chain_complete(spans(chain, t))
+
+
+# ---------------------------------------------------------------------------
+# in-solve convergence telemetry: off is bit-identical, on is narrated
+
+
+def test_telemetry_off_vs_on_differential():
+    """``VecConfig.telemetry`` is pure extra outputs: plans bit-for-bit
+    identical either way; off attaches NO trace and emits NO
+    ``solve_profile``; on attaches a ``ConvergenceTrace`` per result and
+    emits ``solve_profile`` exactly once per live solve — with zero
+    retraces on the warmed bucket."""
+    cluster = _cluster((4.0,))
+    price = float(cluster.prices_per_sec[0])
+    dags = [_chain_dag(f"d{i}", 3, 20.0, 1.0, 0.0, price) for i in range(3)]
+    reqs = [PlanRequest(dag=d) for d in dags]
+
+    ring = RingSink()
+    off_sess = _agora(cluster).session(shared_capacity=True, bucket_p=4)
+    on_agora = Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                     vec_cfg=dataclasses.replace(CFG, telemetry=True))
+    on_sess = on_agora.session(shared_capacity=True, bucket_p=4, sink=ring)
+
+    a = off_sess.plan(reqs)
+    b = on_sess.plan(reqs)
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.solution.option_idx,
+                              rb.solution.option_idx)
+        assert np.array_equal(ra.solution.start, rb.solution.start)
+        assert ra.solution.cost == rb.solution.cost
+        assert ra.convergence is None          # off: nothing attached
+        tr = rb.convergence
+        assert tr is not None and tr.iters > 0 and tr.chains > 0
+        assert len(tr.steps) == len(tr.best_e) == len(tr.accept)
+        # the incumbent energy is monotone non-increasing by construction
+        assert np.all(np.diff(np.asarray(tr.best_e)) <= 1e-9)
+        assert np.all((np.asarray(tr.accept) >= 0.0)
+                      & (np.asarray(tr.accept) <= 1.0))
+        assert 0 <= tr.steps_to_best <= tr.iters
+        assert 0.0 <= tr.plateau_fraction <= 1.0
+
+    profiles = [e for e in ring if e.type == ev.SOLVE_PROFILE]
+    assert len(profiles) == 1                  # exactly once per solve
+    assert len(profiles[0].data["profiles"]) == len(dags)
+    assert {p["tenant"] for p in profiles[0].data["profiles"]} == \
+        {d.name for d in dags}
+
+    # warm re-solve: telemetry-on signature is warmed too — zero retraces
+    t0 = on_sess.stats.trace_count
+    b2 = on_sess.plan(reqs)
+    assert on_sess.stats.trace_count == t0
+    assert all(r.convergence is not None for r in b2)
+    assert len([e for e in ring if e.type == ev.SOLVE_PROFILE]) == 2
+
+
+# ---------------------------------------------------------------------------
+# aggregator roll-ups + Prometheus exposition
+
+
+def test_percentile_helper_matches_numpy_linear_interpolation():
+    vals = sorted([3.0, 1.0, 4.0, 1.5, 9.0])
+    for q in (0.0, 50.0, 90.0, 99.0, 100.0):
+        assert percentile(vals, q) == pytest.approx(
+            float(np.percentile(vals, q)))
+    assert percentile([5.0], 99.0) == 5.0
+
+
+def test_convergence_stats_empty_is_explicit_nones_and_fold_rolls_up():
+    assert EventAggregator().convergence_stats() == {
+        "profiles": 0,
+        "steps_to_best": {"p50": None, "p99": None},
+        "plateau_fraction": None,
+        "accept_decay": None,
+    }
+    agg = EventAggregator.fold([Event(
+        type=ev.SOLVE_PROFILE, ts=0.0, pool="shared",
+        data={"n": 2, "profiles": [
+            {"tenant": "a", "steps_to_best": 10, "plateau_fraction": 0.5,
+             "accept_decay": 0.3},
+            {"tenant": "b", "steps_to_best": 30, "plateau_fraction": 0.1,
+             "accept_decay": 0.1},
+        ]})])
+    conv = agg.convergence_stats()
+    assert conv["profiles"] == 2
+    assert conv["steps_to_best"]["p50"] == pytest.approx(20.0)
+    assert conv["plateau_fraction"] == pytest.approx(0.3)
+    assert conv["accept_decay"] == pytest.approx(0.2)
+    assert agg.pools["shared"]["solve_profiles"] == 1
+
+
+def test_metrics_text_omits_missing_quantiles_never_fakes_zeros():
+    """Before any traffic the aggregator's quantiles are ``None`` — the
+    exposition must OMIT those samples (Prometheus has no null), while
+    plain counters still render as zeros."""
+    cluster = _cluster((4.0,))
+    svc = PlannerService(_agora(cluster), DaemonConfig(
+        pools=(PoolSpec("shared", shared_capacity=True, bucket_p=True),)))
+    text = metrics_text(svc.stats())
+    assert text.endswith("\n")
+    assert "# TYPE planner_up gauge\nplanner_up 0" in text
+    assert "planner_submitted_total 0" in text
+    assert "planner_latency_seconds{" not in text          # None -> absent
+    assert "planner_convergence_steps_to_best{" not in text
+    assert "planner_convergence_plateau_fraction" not in text
+    assert 'planner_pool_pending{pool="shared"} 0' in text
