@@ -179,6 +179,10 @@ class PlanResult:
     traced: bool = False               # batch added a JIT cache entry (cold)
     solve_seconds: float = 0.0         # wall time of the whole batch solve
     convergence: Optional[ConvergenceTrace] = None
+    # served by the daemon's greedy fallback path while the pool's circuit
+    # breaker was open (a valid but not annealed plan) — callers that care
+    # about plan quality must check this flag
+    degraded: bool = False
 
     @property
     def solution(self) -> Solution:

@@ -29,6 +29,18 @@ a time.  ``PlannerService`` turns it into a long-lived service:
   trace happens OFF the per-pool serving executors, which keep serving
   warm traffic), and the next bucket up is pre-warmed in the background
   so sustained growth never pays the compile inline again.
+* **supervised pools with graceful degradation** — a raising dispatch is
+  caught, the pool's serving executor recycled, and the solve retried
+  once before anything user-visible happens; a crashed flusher restarts
+  in place with its queue intact.  A per-pool circuit breaker counts
+  consecutive bad solves (errors, or successes slower than
+  ``breaker_latency_s``): past ``breaker_threshold`` the pool DEGRADES —
+  batches are served greedy airflow-style fallback plans (flagged
+  ``PlanResult.degraded``) instead of being shed — and after
+  ``breaker_cooldown_s`` one half-open probe batch decides whether the
+  solver is trusted again.  ``DaemonConfig.chaos`` attaches the
+  deterministic fault harness (``repro.flow.chaos``) that drills exactly
+  these paths, including capacity revocations narrowed into every solve.
 
 A thin JSON-over-HTTP adapter (``PlannerHTTPServer``) serves non-Python
 callers; ``python -m repro.launch.serve_planner`` is the CLI entry.
@@ -60,6 +72,7 @@ from repro.core.objectives import Goal
 from repro.core.session import (SLA_CLASSES, SLA_GUARANTEED, SLA_STANDARD,
                                 AdmissionDecision, PlanRequest, PlanResult,
                                 _normalize_request)
+from repro.flow.chaos import InjectedFault
 from repro.obs import events as obs
 from repro.obs.aggregate import EventAggregator, finite_or_none
 from repro.obs.events import Event
@@ -68,8 +81,9 @@ from repro.obs.trace import TraceIds
 
 __all__ = [
     "PoolSpec", "DaemonConfig", "DaemonStats", "LoadShedError",
-    "PlannerService", "PlannerHTTPServer", "dag_to_json", "dag_from_json",
-    "plan_result_to_json", "request_from_json", "metrics_text",
+    "PlanServiceError", "PlannerService", "PlannerHTTPServer",
+    "dag_to_json", "dag_from_json", "plan_result_to_json",
+    "request_from_json", "metrics_text",
 ]
 
 
@@ -122,11 +136,31 @@ class DaemonConfig:
     # optional operator sink (e.g. JsonlSink) teed with the service's
     # always-on internal EventAggregator; None = aggregator only
     sink: Any = None
+    # -- fault-tolerance plane -----------------------------------------
+    # deterministic chaos harness (repro.flow.chaos.ChaosConfig); None
+    # (default) injects nothing and keeps the serving path bit-for-bit
+    chaos: Any = None
+    # serve greedy fallback plans (flagged PlanResult.degraded) while a
+    # pool's breaker is open or every solve attempt failed, instead of
+    # failing the batch's futures — availability over plan quality
+    degraded_serve: bool = True
+    breaker_threshold: int = 3         # consecutive bad solves that open
+    #                                    the pool's circuit breaker
+    breaker_latency_s: float = math.inf  # a success slower than this
+    #                                    (wall s) counts as a breach
+    breaker_cooldown_s: float = 60.0   # virtual seconds open before one
+    #                                    half-open probe solve is allowed
+    solve_retries: int = 1             # extra solve attempts per batch,
+    #                                    each on a recycled pool executor
+    max_flusher_restarts: int = 3      # supervised flusher revivals per
+    #                                    pool before failing loudly
 
     def __post_init__(self):
         assert self.flush in ("deadline", "fill"), self.flush
         assert self.pools, "need at least one PoolSpec"
         assert self.max_batch >= 1 and self.max_queue >= 1
+        assert self.breaker_threshold >= 1 and self.breaker_cooldown_s > 0
+        assert self.solve_retries >= 0 and self.max_flusher_restarts >= 0
         names = [p.name for p in self.pools]
         assert len(set(names)) == len(names), f"duplicate pool names {names}"
 
@@ -141,6 +175,18 @@ class LoadShedError(RuntimeError):
         super().__init__(reason)
         self.reason = reason
         self.decision = decision
+
+
+class PlanServiceError(RuntimeError):
+    """Typed terminal failure for a submitted request: its batch's solve
+    raised, the in-batch retry (on a recycled pool executor) failed too,
+    and the degraded fallback was disabled or also failed.  ``cause``
+    keeps the last underlying exception."""
+
+    def __init__(self, reason: str, cause: Optional[BaseException] = None):
+        super().__init__(reason)
+        self.reason = reason
+        self.cause = cause
 
 
 @dataclasses.dataclass
@@ -159,7 +205,16 @@ class DaemonStats:
     widen_events: int = 0              # batches that exited the warmed
     #                                    envelope (served on the widen
     #                                    thread, next bucket pre-warmed)
-    errors: int = 0                    # batches whose solve raised
+    errors: int = 0                    # solve attempts that raised
+    pool_restarts: int = 0             # serving executors recycled after
+    #                                    a raising dispatch
+    flusher_restarts: int = 0          # supervised flusher revivals
+    degraded_served: int = 0           # requests served by the greedy
+    #                                    fallback (breaker open or every
+    #                                    solve attempt failed)
+    faults_injected: int = 0           # chaos-harness injections observed
+    revocations: int = 0               # capacity revocations applied to
+    #                                    the serving capacity vector
 
 
 @dataclasses.dataclass
@@ -174,17 +229,76 @@ class _Pending:
     #                                    deadline flush subtracts
 
 
-class _PoolEntry:
-    """Session + queue + serving thread for one ``PoolSpec``."""
+class _Breaker:
+    """Per-pool circuit breaker on the service's virtual clock.
 
-    def __init__(self, spec: PoolSpec, session):
+    closed -> (``threshold`` consecutive bad solves: errors, or successes
+    slower than ``latency_s``) -> open -> (``cooldown_s`` virtual seconds)
+    -> half_open (ONE probe batch solves for real) -> closed on a clean
+    probe, straight back to open on a failed one.  While open, ``allow``
+    answers "degrade": the pool serves greedy fallback plans instead of
+    shedding."""
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, threshold: int, latency_s: float, cooldown_s: float):
+        self.threshold = int(threshold)
+        self.latency_s = float(latency_s)
+        self.cooldown_s = float(cooldown_s)
+        self.state = self.CLOSED
+        self.failures = 0              # consecutive bad solves
+        self.opened_v = -math.inf      # virtual instant the breaker opened
+
+    def allow(self, now_v: float) -> str:
+        """"serve" (closed), "degrade" (open, still cooling down) or
+        "probe" (cooled down: this batch may try the solver again)."""
+        if self.state == self.CLOSED:
+            return "serve"
+        if now_v - self.opened_v >= self.cooldown_s:
+            self.state = self.HALF_OPEN
+            return "probe"
+        return "degrade"
+
+    def record_failure(self, now_v: float) -> bool:
+        """Count one bad solve; True when this one OPENS the breaker
+        (a failed half-open probe re-opens it)."""
+        self.failures += 1
+        if self.state == self.HALF_OPEN or (
+                self.state == self.CLOSED
+                and self.failures >= self.threshold):
+            self.state = self.OPEN
+            self.opened_v = now_v
+            return True
+        if self.state == self.OPEN:
+            self.opened_v = now_v      # keep cooling from the LAST failure
+        return False
+
+    def record_success(self, now_v: float,
+                       latency_s: float) -> Optional[str]:
+        """Count one served solve: ``"recovered"`` when it closes the
+        breaker, ``"opened"`` when the success was a latency breach that
+        tripped it, ``None`` otherwise."""
+        if latency_s > self.latency_s:
+            return "opened" if self.record_failure(now_v) else None
+        was = self.state
+        self.state = self.CLOSED
+        self.failures = 0
+        return "recovered" if was != self.CLOSED else None
+
+
+class _PoolEntry:
+    """Session + queue + serving thread + breaker for one ``PoolSpec``."""
+
+    def __init__(self, spec: PoolSpec, session, breaker: _Breaker):
         self.spec = spec
         self.session = session
+        self.breaker = breaker
         self.pending: Deque[_Pending] = collections.deque()
         self.event: Optional[asyncio.Event] = None   # created on start()
         self.executor = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix=f"planner-{spec.name}")
         self.flusher: Optional[asyncio.Task] = None
+        self.restarts = 0              # supervised flusher revivals
 
 
 # ---------------------------------------------------------------------------
@@ -218,9 +332,20 @@ class PlannerService:
                 shared_capacity=spec.shared_capacity, bucket_p=spec.bucket_p,
                 mesh=spec.mesh, goal=spec.goal,
                 sink=TagSink(self.sink, pool=spec.name))
-            self.entries[spec.name] = _PoolEntry(spec, session)
+            self.entries[spec.name] = _PoolEntry(spec, session, _Breaker(
+                self.cfg.breaker_threshold, self.cfg.breaker_latency_s,
+                self.cfg.breaker_cooldown_s))
         self.default_pool = self.cfg.pools[0].name
         self.stats_counters = DaemonStats()
+        # chaos harness: ONE compiled fault plan shared by every pool, so
+        # the injected sequence is a pure function of the config; None
+        # (the default) keeps every consultation site on its fast path
+        self._fault_plan = (self.cfg.chaos.compile()
+                            if self.cfg.chaos is not None
+                            and getattr(self.cfg.chaos, "enabled", False)
+                            else None)
+        self._base_caps = np.asarray(agora.cluster.caps, float)
+        self._revoked_seen: set = set()
         # causal traces: every submission is stamped with a trace id at the
         # front door; the id rides PlanRequest.trace through session /
         # executor emissions so `obs_report --trace` can rebuild the
@@ -412,18 +537,27 @@ class PlannerService:
         return min(cands)
 
     async def _flusher(self, entry: _PoolEntry) -> None:
-        # a dead flusher must not strand its queue: fail the pending
-        # futures loudly, then re-raise so stop() surfaces the bug
-        try:
-            await self._flusher_loop(entry)
-        except BaseException as exc:
-            while entry.pending:
-                p = entry.pending.popleft()
-                if not p.future.done():
-                    p.future.set_exception(
-                        RuntimeError(f"pool {entry.spec.name!r} flusher "
-                                     f"died: {exc!r}"))
-            raise
+        # supervised: a crashed flusher is restarted IN PLACE — the queue
+        # deque survives, so no pending future is stranded and nothing is
+        # re-submitted (the zero-retrace contract holds across a restart).
+        # Past max_flusher_restarts the pending futures are failed loudly
+        # and the exception re-raised so stop() surfaces the bug.
+        while True:
+            try:
+                return await self._flusher_loop(entry)
+            except asyncio.CancelledError:
+                raise
+            except BaseException as exc:
+                if entry.restarts >= self.cfg.max_flusher_restarts:
+                    while entry.pending:
+                        p = entry.pending.popleft()
+                        if not p.future.done():
+                            p.future.set_exception(RuntimeError(
+                                f"pool {entry.spec.name!r} flusher died: "
+                                f"{exc!r}"))
+                    raise
+                entry.restarts += 1
+                self.stats_counters.flusher_restarts += 1
 
     async def _flusher_loop(self, entry: _PoolEntry) -> None:
         cfg = self.cfg
@@ -497,15 +631,134 @@ class PlannerService:
                    for d in r.dags for t in d.tasks)
         return jmax, omax
 
+    def _restart_pool(self, entry: _PoolEntry) -> None:
+        """Recycle the pool's serving executor after a raising dispatch:
+        the old worker thread may be wedged (a chaos delay, a poisoned
+        solve), so the replacement starts clean and the old one drains in
+        the background."""
+        old = entry.executor
+        entry.executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"planner-{entry.spec.name}")
+        old.shutdown(wait=False)
+        self.stats_counters.pool_restarts += 1
+
+    def _revoked_capacity(self, now_v: float) -> Optional[np.ndarray]:
+        """The chaos-shrunken capacity vector at ``now_v``, or ``None``
+        when nothing is revoked (the default path passes no capacity, so
+        it stays bit-for-bit).  The first observation of each revocation
+        emits one ``capacity_revoked`` event."""
+        fp = self._fault_plan
+        if fp is None or not fp.cfg.revocations:
+            return None
+        for i, r in enumerate(fp.cfg.revocations):
+            if i not in self._revoked_seen and r.active_at(now_v):
+                self._revoked_seen.add(i)
+                self.stats_counters.revocations += 1
+                if self.sink:
+                    self.sink.emit(Event(
+                        obs.CAPACITY_REVOKED, ts=now_v,
+                        data={"delta": [float(d) for d in r.delta],
+                              "until": finite_or_none(r.until),
+                              "caps_after": [
+                                  float(c) for c in
+                                  fp.caps_at(now_v, self._base_caps)]}))
+        caps = fp.caps_at(now_v, self._base_caps)
+        if np.allclose(caps, self._base_caps):
+            return None
+        return caps
+
+    def _degraded_results(self, entry: _PoolEntry,
+                          requests: Sequence[PlanRequest],
+                          capacity=None) -> List[PlanResult]:
+        """Greedy fallback plans: the airflow-style SGS baseline against
+        the (possibly revoked) capacity — milliseconds of host work, no
+        solver involvement.  Valid schedules, not annealed ones; every
+        result is flagged ``degraded``."""
+        from repro.core.agora import Plan
+        from repro.core.annealer import reference_point
+        from repro.core.baselines import airflow_plan
+        from repro.core.dag import flatten
+
+        t0 = time.monotonic()
+        cluster = entry.session._cluster_for(capacity)
+        out = []
+        for i, r in enumerate(requests):
+            problem = flatten(list(r.dags), cluster.num_resources)
+            sol = airflow_plan(problem, cluster)
+            plan = Plan(problem, sol, r.goal or entry.session.goal, cluster,
+                        reference_point(problem, cluster))
+            out.append(PlanResult(plan, r, index=i, bucket=0,
+                                  solve_seconds=time.monotonic() - t0,
+                                  degraded=True))
+        return out
+
+    def _finish_batch(self, entry: _PoolEntry, batch: List[_Pending],
+                      results: Sequence[PlanResult], cause: str, *,
+                      warm: bool, degraded: bool = False) -> None:
+        """Resolve the batch's futures and narrate the outcome: one
+        dispatch event (wall latencies feed the aggregator's p50/p99),
+        plus the per-request plan-level deadline verdict — virtual
+        delivery time + planned completion vs the absolute deadline, the
+        same verdict the benchmarks compute post-hoc."""
+        pool = entry.spec.name
+        wall = time.monotonic()
+        done_v = self._now()
+        latencies = [wall - p.submit_wall for p in batch]
+        for p, res in zip(batch, results):
+            if not p.future.done():
+                p.future.set_result(res)
+        self.stats_counters.served += len(batch)
+        if degraded:
+            self.stats_counters.degraded_served += len(batch)
+        if self.sink:
+            data = {"mode": "daemon", "cause": cause, "n": len(batch),
+                    "warm": warm, "latency_s": latencies,
+                    "trace_ids": [p.request.trace for p in batch
+                                  if p.request.trace]}
+            if degraded:
+                data["degraded"] = True
+            self.sink.emit(Event(obs.DISPATCH, ts=done_v, pool=pool,
+                                 data=data))
+            for p, res in zip(batch, results):
+                if math.isfinite(p.request.deadline):
+                    completion = done_v + float(
+                        res.plan.solution.finish.max())
+                    hit = completion <= p.request.deadline + 1e-6
+                    self.sink.emit(Event(
+                        obs.DEADLINE_HIT if hit else obs.DEADLINE_MISS,
+                        ts=done_v, tenant=p.request.name, pool=pool,
+                        sla=p.request.sla,
+                        trace_id=p.request.trace, parent=obs.DISPATCH,
+                        data={"deadline": p.request.deadline,
+                              "completion": completion, "failed": False}))
+
     async def _dispatch(self, entry: _PoolEntry, batch: List[_Pending],
                         cause: str = "fill") -> None:
         now_v = self._now()
         pool = entry.spec.name
+        tids = [p.request.trace for p in batch if p.request.trace]
         requests = [
             dataclasses.replace(p.request, goal=self._goal_for(p.request,
                                                                now_v))
             if p.request.goal is None else p.request
             for p in batch]
+        capacity = self._revoked_capacity(now_v)
+
+        # circuit breaker: while the pool is open and still cooling down,
+        # the solver is not trusted — serve the greedy fallback instead of
+        # shedding the batch.  (A fallback failure falls through to the
+        # solve path: degradation must never strand a future.)
+        if (entry.breaker.allow(now_v) == "degrade"
+                and self.cfg.degraded_serve):
+            try:
+                results = self._degraded_results(entry, requests, capacity)
+            except Exception:  # noqa: BLE001 — fall through to the solver
+                pass
+            else:
+                self._finish_batch(entry, batch, results, cause,
+                                   warm=True, degraded=True)
+                return
+
         jmax, omax = self._batch_envelope(requests)
         warm = entry.session.is_warm(len(requests), jmax, omax)
         executor = entry.executor
@@ -522,55 +775,96 @@ class PlannerService:
                           "warmed": sorted(entry.session.envelopes)}))
             executor = self._widen_pool
         loop = asyncio.get_running_loop()
-        try:
-            results = await loop.run_in_executor(
-                executor, lambda: entry.session.plan(requests))
-        except Exception as exc:  # noqa: BLE001 — surfaced per future
-            self.stats_counters.errors += 1
-            if self.sink:
-                for p in batch:
+        exc: Optional[BaseException] = None
+        results = None
+        t0 = time.monotonic()
+        for attempt in range(1 + self.cfg.solve_retries):
+            # chaos verdict, one draw per ATTEMPT (retries re-roll): an
+            # injected solver error or a solve-latency spike
+            fault = (self._fault_plan.solve_fault()
+                     if self._fault_plan is not None else None)
+            if fault is not None:
+                self.stats_counters.faults_injected += 1
+                if self.sink:
                     self.sink.emit(Event(
-                        obs.DROP, ts=self._now(), tenant=p.request.name,
-                        pool=pool, sla=p.request.sla,
-                        trace_id=p.request.trace, parent=obs.FLUSH,
-                        data={"reason": "solve_error",
-                              "error": repr(exc)}))
-            for p in batch:
-                if not p.future.done():
-                    p.future.set_exception(exc)
+                        obs.FAULT_INJECTED, ts=self._now(), pool=pool,
+                        data={"kind": f"solver_{fault.kind}",
+                              "delay_s": fault.delay_s,
+                              "attempt": attempt, "trace_ids": tids}))
+                if fault.kind == "delay":
+                    await asyncio.sleep(self._to_wall(fault.delay_s))
+            t0 = time.monotonic()
+            try:
+                if fault is not None and fault.kind == "error":
+                    raise InjectedFault("chaos: solver error")
+                results = await loop.run_in_executor(
+                    executor, lambda: entry.session.plan(
+                        requests, capacity=capacity))
+                break
+            except Exception as e:  # noqa: BLE001 — supervised below
+                exc = e
+                self.stats_counters.errors += 1
+                if entry.breaker.record_failure(self._now()) and self.sink:
+                    self.sink.emit(Event(
+                        obs.POOL_DEGRADED, ts=self._now(), pool=pool,
+                        parent=(obs.FAULT_INJECTED
+                                if isinstance(e, InjectedFault) else None),
+                        data={"state": entry.breaker.state,
+                              "failures": entry.breaker.failures,
+                              "error": repr(e), "trace_ids": tids}))
+                # the worker thread may be wedged: recycle the pool
+                # executor before the retry (the shared widen thread is
+                # left alone)
+                if executor is entry.executor:
+                    self._restart_pool(entry)
+                    executor = entry.executor
+
+        if results is not None:
+            note = entry.breaker.record_success(self._now(),
+                                                time.monotonic() - t0)
+            if self.sink and note == "recovered":
+                # the probe's chain carries the recovery span
+                self.sink.emit(Event(
+                    obs.POOL_RECOVERED, ts=self._now(), pool=pool,
+                    data={"state": entry.breaker.state,
+                          "trace_ids": tids}))
+            elif self.sink and note == "opened":
+                self.sink.emit(Event(
+                    obs.POOL_DEGRADED, ts=self._now(), pool=pool,
+                    data={"state": entry.breaker.state,
+                          "failures": entry.breaker.failures,
+                          "reason": "latency",
+                          "latency_s": time.monotonic() - t0,
+                          "trace_ids": tids}))
+            self._finish_batch(entry, batch, results, cause, warm=warm)
+            if not warm and self.cfg.auto_widen and self._running:
+                self._pre_warm_next(entry, requests, jmax, omax)
             return
-        wall = time.monotonic()
-        done_v = self._now()
-        latencies = [wall - p.submit_wall for p in batch]
-        for p, res in zip(batch, results):
-            if not p.future.done():
-                p.future.set_result(res)
-        self.stats_counters.served += len(batch)
+
+        # every solve attempt failed: degraded fallback when allowed,
+        # typed per-future errors otherwise — NEVER a stranded future
+        if self.cfg.degraded_serve:
+            try:
+                dres = self._degraded_results(entry, requests, capacity)
+            except Exception as e:  # noqa: BLE001 — fall through, typed
+                exc = e
+            else:
+                self._finish_batch(entry, batch, dres, cause,
+                                   warm=warm, degraded=True)
+                return
         if self.sink:
-            # one dispatch event (wall latencies feed the aggregator's
-            # p50/p99), plus the per-request plan-level deadline verdict —
-            # virtual delivery time + planned completion vs the absolute
-            # deadline, the same verdict the benchmarks compute post-hoc
-            self.sink.emit(Event(
-                obs.DISPATCH, ts=done_v, pool=pool,
-                data={"mode": "daemon", "cause": cause, "n": len(batch),
-                      "warm": warm, "latency_s": latencies,
-                      "trace_ids": [p.request.trace for p in batch
-                                    if p.request.trace]}))
-            for p, res in zip(batch, results):
-                if math.isfinite(p.request.deadline):
-                    completion = done_v + float(
-                        res.plan.solution.finish.max())
-                    hit = completion <= p.request.deadline + 1e-6
-                    self.sink.emit(Event(
-                        obs.DEADLINE_HIT if hit else obs.DEADLINE_MISS,
-                        ts=done_v, tenant=p.request.name, pool=pool,
-                        sla=p.request.sla,
-                        trace_id=p.request.trace, parent=obs.DISPATCH,
-                        data={"deadline": p.request.deadline,
-                              "completion": completion, "failed": False}))
-        if not warm and self.cfg.auto_widen and self._running:
-            self._pre_warm_next(entry, requests, jmax, omax)
+            for p in batch:
+                self.sink.emit(Event(
+                    obs.DROP, ts=self._now(), tenant=p.request.name,
+                    pool=pool, sla=p.request.sla,
+                    trace_id=p.request.trace, parent=obs.FLUSH,
+                    data={"reason": "solve_error", "error": repr(exc)}))
+        err = PlanServiceError(
+            f"pool {pool!r}: batch solve failed after "
+            f"{1 + self.cfg.solve_retries} attempts: {exc!r}", exc)
+        for p in batch:
+            if not p.future.done():
+                p.future.set_exception(err)
 
     def _pre_warm_next(self, entry: _PoolEntry,
                        requests: Sequence[PlanRequest],
@@ -616,6 +910,9 @@ class PlannerService:
                 "plans": st.plans,
                 "warmups": st.warmups,
                 "pending": len(entry.pending),
+                "breaker": entry.breaker.state,
+                "breaker_failures": entry.breaker.failures,
+                "flusher_restarts": entry.restarts,
                 "envelopes": sorted(entry.session.envelopes),
                 "buckets": {
                     str(b): {"plans": bs.plans, "traces": bs.traces,
@@ -693,7 +990,14 @@ def metrics_text(stats: Dict[str, Any]) -> str:
             ("shed_admission", "Requests shed by admission control."),
             ("batches", "Batches flushed to the solver."),
             ("widen_events", "Batches that exited the warmed envelope."),
-            ("errors", "Batches whose solve raised."),
+            ("errors", "Solve attempts that raised."),
+            ("pool_restarts",
+             "Serving executors recycled after a raising dispatch."),
+            ("flusher_restarts", "Supervised flusher revivals."),
+            ("degraded_served",
+             "Requests served by the greedy fallback path."),
+            ("faults_injected", "Chaos-harness fault injections."),
+            ("revocations", "Capacity revocations applied."),
     ):
         family(f"planner_{key}_total", help_, "counter",
                [_prom(f"planner_{key}_total", stats.get(key, 0))])
@@ -760,6 +1064,12 @@ def metrics_text(stats: Dict[str, Any]) -> str:
     family("planner_pool_pending", "Queued submissions per pool.", "gauge",
            [_prom("planner_pool_pending", p.get("pending"), {"pool": name})
             for name, p in sorted(pools.items())])
+    family("planner_pool_degraded",
+           "Whether the pool's circuit breaker is open (1 = serving "
+           "greedy fallback plans).", "gauge",
+           [_prom("planner_pool_degraded",
+                  0.0 if p.get("breaker", "closed") == "closed" else 1.0,
+                  {"pool": name}) for name, p in sorted(pools.items())])
     family("planner_pool_traces_total", "JIT traces per pool session.",
            "counter",
            [_prom("planner_pool_traces_total", p.get("trace_count"),
@@ -859,13 +1169,21 @@ class PlannerHTTPServer:
     * ``GET /v1/metrics`` — the same snapshot in Prometheus text
       exposition format (``text/plain; version=0.0.4``), scrapable.
     * ``GET /healthz``   — liveness.
+
+    Hardened against slow and oversized clients: a connection that has
+    not delivered its full request within ``read_timeout_s`` gets 408 (a
+    stalled peer must not pin the handler), and a declared body larger
+    than ``max_body`` gets 413 without reading it.
     """
 
     def __init__(self, service: PlannerService, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, *, read_timeout_s: float = 30.0,
+                 max_body: int = 1 << 20):
         self.service = service
         self.host = host
         self.port = port
+        self.read_timeout_s = float(read_timeout_s)
+        self.max_body = int(max_body)
         self._server: Optional[asyncio.AbstractServer] = None
 
     async def start(self) -> Tuple[str, int]:
@@ -896,6 +1214,7 @@ class PlannerHTTPServer:
             body = json.dumps(payload).encode()
             ctype = "application/json"
         reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                  408: "Request Timeout", 413: "Payload Too Large",
                   429: "Too Many Requests", 500: "Internal Server Error",
                   503: "Service Unavailable"}.get(status, "OK")
         writer.write(
@@ -908,15 +1227,18 @@ class PlannerHTTPServer:
         finally:
             writer.close()
 
-    async def _respond(self, reader: asyncio.StreamReader
-                       ) -> Tuple[int, Union[dict, str]]:
+    async def _read_request(self, reader: asyncio.StreamReader):
+        """Parse one request off the wire; returns ``(parsed, error)``
+        where exactly one is non-None.  Enforces ``max_body`` BEFORE
+        reading the body — an oversized declaration costs no memory."""
         request_line = (await reader.readline()).decode("latin-1").strip()
         if not request_line:
-            return 400, {"error": "empty request"}
+            return None, (400, {"error": "empty request"})
         try:
             method, path, _ = request_line.split(" ", 2)
         except ValueError:
-            return 400, {"error": f"malformed request line {request_line!r}"}
+            return None, (400, {"error": f"malformed request line "
+                                         f"{request_line!r}"})
         headers: Dict[str, str] = {}
         while True:
             line = (await reader.readline()).decode("latin-1").strip()
@@ -924,10 +1246,31 @@ class PlannerHTTPServer:
                 break
             key, _, value = line.partition(":")
             headers[key.strip().lower()] = value.strip()
-        body = b""
-        length = int(headers.get("content-length", 0) or 0)
-        if length:
-            body = await reader.readexactly(length)
+        try:
+            length = int(headers.get("content-length", 0) or 0)
+        except ValueError:
+            return None, (400, {"error": "malformed content-length"})
+        if length > self.max_body:
+            return None, (413, {"error": f"body of {length} bytes exceeds "
+                                         f"max_body {self.max_body}"})
+        body = await reader.readexactly(length) if length > 0 else b""
+        return (method, path, headers, body), None
+
+    async def _respond(self, reader: asyncio.StreamReader
+                       ) -> Tuple[int, Union[dict, str]]:
+        # the timeout covers the READ only — a legitimate long-running
+        # plan solve after parsing is not a slow client
+        try:
+            parsed, err = await asyncio.wait_for(
+                self._read_request(reader), self.read_timeout_s)
+        except asyncio.TimeoutError:
+            return 408, {"error": f"request not received within "
+                                  f"{self.read_timeout_s:g}s"}
+        except asyncio.IncompleteReadError:
+            return 400, {"error": "connection closed mid-body"}
+        if err is not None:
+            return err
+        method, path, headers, body = parsed
 
         if method == "GET" and path == "/healthz":
             return 200, {"ok": True, "running": self.service._running}

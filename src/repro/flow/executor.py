@@ -26,6 +26,7 @@ import json
 import math
 import os
 import time
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -64,15 +65,45 @@ class FlowConfig:
     # starts alone cannot protect the pool once runtime noise inflates a
     # predecessor's duration past its planned window)
     enforce_capacity: bool = False
+    # decorrelate retry storms: stretch each backoff delay by a seeded
+    # factor in [1, 1 + retry_jitter].  The draw is keyed by (seed, caller
+    # key, attempt), never shortens a delay, and the default 0.0 keeps the
+    # historical delays bit-for-bit.
+    retry_jitter: float = 0.0
+    # chaos harness (repro.flow.chaos.ChaosConfig): its revocation timeline
+    # shrinks the capacity vector mid-run, killing enough running work to
+    # fit and re-enqueueing it through the standard retry/backoff
+    # machinery.  None (default) = the pre-chaos executor, bit-for-bit.
+    chaos: Optional[Any] = None
+    # hard launch cut (a capacity-revocation instant): NO first launches at
+    # or past it, ``horizon_exempt`` included — unlike ``launch_horizon``,
+    # which guaranteed-class tenants may cross.  The streaming control
+    # plane replans everything beyond the cut against the shrunken pool.
+    hard_horizon: float = math.inf
 
 
-def _backoff_delay(cfg: FlowConfig, attempt: int) -> float:
+def _backoff_delay(cfg: FlowConfig, attempt: int, key: int = 0) -> float:
     """Capped exponential retry backoff, shared by task-level retries
-    (FlowRunner) and plan-level retries (MultiTenantRunner)."""
+    (FlowRunner), plan-level retries (MultiTenantRunner), and the
+    streaming requeue/preemption delays.  ``key`` decorrelates the
+    optional jitter across callers (task index, crc32 of a tenant name);
+    with ``cfg.retry_jitter == 0`` it is inert."""
     if cfg.retry_backoff <= 0:
         return 0.0
-    return min(cfg.retry_backoff_cap,
-               cfg.retry_backoff * 2.0 ** (attempt - 1))
+    delay = min(cfg.retry_backoff_cap,
+                cfg.retry_backoff * 2.0 ** (attempt - 1))
+    if cfg.retry_jitter > 0.0:
+        rng = np.random.default_rng(
+            [int(cfg.seed) & 0xFFFFFFFF, int(key) & 0xFFFFFFFF,
+             int(attempt) & 0xFFFFFFFF, 0xB0FF])
+        delay *= 1.0 + cfg.retry_jitter * float(rng.random())
+    return delay
+
+
+def _jitter_key(name: str) -> int:
+    """Stable per-tenant jitter key (crc32, NOT ``hash`` — that one is
+    process-salted and would break run-to-run reproducibility)."""
+    return zlib.crc32(name.encode())
 
 
 @dataclasses.dataclass
@@ -82,6 +113,9 @@ class TaskRun:
     start: float
     expected_end: float
     speculative: bool = False
+    # set when a capacity revocation kills this run mid-flight: its queued
+    # finish/fail/speculate events are stale and must be ignored on pop
+    dead: bool = False
 
 
 @dataclasses.dataclass
@@ -102,6 +136,9 @@ class FlowResult:
     # tasks withheld by cfg.launch_horizon: never launched, not billed —
     # the streaming control plane re-plans and re-dispatches them later
     unlaunched: List[int] = dataclasses.field(default_factory=list)
+    # running attempts killed by capacity revocations (spot preemption);
+    # each kill also counts as a retry on the task that lost the work
+    kills: int = 0
 
 
 class FlowRunner:
@@ -119,6 +156,7 @@ class FlowRunner:
         self.retries = 0
         self.speculations = 0
         self.replans = 0
+        self.kills = 0
 
     # ------------------------------------------------------------------
 
@@ -172,7 +210,15 @@ class FlowRunner:
         dur_all, dem_all, _, _ = problem.option_arrays()
         oi = self.plan.solution.option_idx
         task_dem = dem_all[np.arange(J), oi] if J else dem_all.reshape(0, -1)
-        caps = np.asarray(self.plan.cluster.caps, float)
+        base_caps = np.asarray(self.plan.cluster.caps, float)
+        # chaos revocation timeline (None when no chaos attached — the
+        # default path never consults it): ``caps`` is rebound at every
+        # revocation instant, and the closures below read the live value
+        chaos_plan = (cfg.chaos.compile()
+                      if cfg.chaos is not None
+                      and getattr(cfg.chaos, "revocations", ()) else None)
+        caps = (chaos_plan.caps_at(0.0, base_caps)
+                if chaos_plan is not None else base_caps)
         usage = np.zeros(len(caps))        # live demand of running attempts
 
         clock = 0.0
@@ -209,6 +255,10 @@ class FlowRunner:
             # the launch horizon withholds FIRST launches only: an already
             # launched task keeps its retries/duplicates so it always runs
             # to completion within this dispatch
+            if attempts[j] == 0 and clock >= cfg.hard_horizon - 1e-9:
+                # the hard cut admits NO first launches, exemptions
+                # included: past it the pool may already be revoked
+                return False
             return (clock < cfg.launch_horizon - 1e-9 or attempts[j] > 0
                     or j in cfg.horizon_exempt)
 
@@ -281,11 +331,46 @@ class FlowRunner:
                     capacity_waiting.discard(j)
                     launch(j)
 
+        if chaos_plan is not None:
+            # one heap event per capacity change: the revocation landing
+            # and (when finite) its expiry — both re-derive ``caps`` from
+            # the timeline, so overlapping revocations compose correctly
+            for r in cfg.chaos.revocations:
+                if r.at > 0.0:
+                    push(float(r.at), "revoke", r)
+                if math.isfinite(r.until):
+                    push(float(r.until), "revoke", r)
+
         for j in ready_tasks():
             try_launch(j)
 
         while heap:
             clock, _, kind, payload = heapq.heappop(heap)
+            if kind == "revoke":
+                caps = chaos_plan.caps_at(clock, base_caps)
+                # spot preemption: kill running work (latest expected
+                # finish first — it has the most left to lose anyway) until
+                # the survivors fit the shrunken pool, and re-enqueue the
+                # victims through the standard retry/backoff machinery
+                while running and np.any(usage > caps + 1e-6):
+                    jk = max(running, key=lambda x: (
+                        max(r.expected_end for r in running[x]), x))
+                    runs = running.pop(jk)
+                    for r in runs:
+                        r.dead = True
+                    release_usage(runs)
+                    self.retries += 1
+                    self.kills += 1
+                    task_retries[jk] += 1
+                    self._log(clock, f"task {jk} killed: capacity revoked")
+                    delay = _backoff_delay(cfg, attempts[jk], key=jk)
+                    if delay > 0:
+                        backing_off.add(jk)
+                        backoff_idle[jk] = backoff_idle.get(jk, 0.0) + delay
+                    push(clock + delay, "retry", jk)
+                # an expiring revocation RESTORES capacity: wake waiters
+                rescan_capacity()
+                continue
             if kind in ("release", "retry"):
                 if kind == "retry":
                     backing_off.discard(payload)
@@ -297,6 +382,8 @@ class FlowRunner:
                 continue
             run = payload
             j = run.task
+            if run.dead:
+                continue  # killed by a revocation; its events are stale
             if kind == "speculate":
                 if j in self.done or j not in running:
                     continue
@@ -322,7 +409,7 @@ class FlowRunner:
                 if not running[j]:
                     del running[j]
                     # capped exponential backoff before the next attempt
-                    delay = _backoff_delay(cfg, run.attempt)
+                    delay = _backoff_delay(cfg, run.attempt, key=j)
                     if delay > 0:
                         self._log(clock, f"task {j} backoff {delay:.1f}s")
                         backing_off.add(j)
@@ -360,7 +447,7 @@ class FlowRunner:
         return FlowResult(makespan, cost, dict(self.started), dict(self.done),
                           self.retries, self.speculations, self.replans,
                           self.events, task_retries, task_specs, task_cost,
-                          unlaunched)
+                          unlaunched, self.kills)
 
 
 # ---------------------------------------------------------------------------
@@ -508,7 +595,7 @@ class MultiTenantRunner:
                         realized_makespan=math.inf, cost=0.0, retries=0,
                         speculations=0, plan_retries=n, failed=True))
                     continue
-                delay = _backoff_delay(self.cfg, n)
+                delay = _backoff_delay(self.cfg, n, key=_jitter_key(dag.name))
                 self.events.append(
                     f"[t={clock:9.1f}] tenant {dag.name}: plan failed joint "
                     f"validation — re-enqueued (backoff {delay:.1f}s)")

@@ -32,17 +32,25 @@ The FIFO no-SLA baseline (``StreamConfig(sla_aware=False,
 replan_on_arrival=False)``) degenerates to PR 2's rolling-horizon loop:
 equal goals, full-drain rounds, no preemption — the comparison the
 ``bench_streaming`` deadline-hit-rate gate is built on.
+
+Fault tolerance (``StreamConfig.chaos``): the control plane consumes a
+chaos revocation timeline (``repro.flow.chaos``) as spot preemption —
+dispatches hard-stop at the next capacity change, running work on
+revoked capacity is killed and re-enqueued (``_apply_revocations``),
+survivors re-plan against the shrunken pool, and the capacity audit
+sweeps against the time-varying ceiling.  With no chaos config attached
+the loop is bit-for-bit identical to the pre-chaos code.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.agora import Agora, Plan, combine_plans
-from repro.core.dag import DAG
+from repro.core.dag import DAG, Task, TaskOption, flatten
 from repro.core.objectives import Goal
 # SLA classes live with the typed request surface now; re-exported here for
 # compatibility with existing callers
@@ -50,7 +58,7 @@ from repro.core.session import (SLA_BEST_EFFORT, SLA_CLASSES, SLA_GUARANTEED,
                                 SLA_STANDARD, PlanRequest)
 from repro.flow.executor import (FlowConfig, FlowResult, FlowRunner,
                                  MultiTenantRunner, TenantRecord,
-                                 _backoff_delay)
+                                 _backoff_delay, _jitter_key)
 from repro.obs import events as obs
 from repro.obs.aggregate import finite_or_none
 from repro.obs.events import Event
@@ -116,6 +124,21 @@ class StreamConfig:
     # to wait for (``_next_release`` infinite) burns its retry budget at
     # DISTINCT clock times instead of back-to-back rounds at one instant
     min_requeue_delta: float = 1.0
+    # fault-tolerance plane: a ``repro.flow.chaos.ChaosConfig`` whose
+    # revocation timeline the control plane consumes — running tasks on
+    # revoked capacity are killed (truncated and billed at the revocation
+    # instant) and re-enqueued through the standard backoff machinery, and
+    # survivors re-plan against the shrunken pool.  None (the default)
+    # keeps the loop bit-for-bit identical to the pre-chaos code.
+    chaos: Optional[Any] = None
+    # experimental: re-admit a tenant BEFORE its own in-flight work drains,
+    # pinning live predecessors into the re-solve as zero-demand phantom
+    # tasks of their remaining duration (dependents are edge-sequenced
+    # behind them; capacity stays conservatively reserved through the
+    # in-flight residue accounting, so phantoms cannot cause violations).
+    # Off by default: phantom counts vary per round, which can add JIT
+    # bucket envelopes beyond the warmed set.
+    pin_inflight: bool = False
 
 
 def sla_goal(req: TenantRequest, base: Goal, now: float,
@@ -226,6 +249,19 @@ class StreamingRunner(MultiTenantRunner):
         self.requests = requests
         self.preempt_events = 0
         self.arrival_replans = 0
+        # chaos revocation timeline (tentpole 3): compiled once; only the
+        # capacity half of the chaos config is consumed here — solver/sink
+        # faults belong to the daemon and the obs plane respectively
+        self._fault_plan = (self.stream.chaos.compile()
+                            if self.stream.chaos is not None
+                            and getattr(self.stream.chaos, "revocations", ())
+                            else None)
+        self.revocation_kills = 0
+        # truncated intervals of revocation-killed runs (abs_start, kill_t,
+        # demand): the victims really held that capacity, so the residual
+        # accounting and the violation audit both include these windows
+        self._truncated: List[Tuple[float, float, np.ndarray]] = []
+        self._revoked_emitted: set = set()
         # causal traces: each tenant is stamped at arrival; the id rides
         # its PlanRequests and every per-tenant event across rounds
         self._trace_ids = TraceIds()
@@ -244,7 +280,8 @@ class StreamingRunner(MultiTenantRunner):
         if cfg.retry_backoff <= 0:
             cfg = dataclasses.replace(cfg,
                                       retry_backoff=self.stream.preempt_backoff)
-        return max(_backoff_delay(cfg, state.preemptions),
+        return max(_backoff_delay(cfg, state.preemptions,
+                                  key=_jitter_key(state.name)),
                    self.stream.min_requeue_delta)
 
     def _plan_batch(self, clock: float, batch: List[_TenantState],
@@ -254,14 +291,72 @@ class StreamingRunner(MultiTenantRunner):
         capacity (the pool minus in-flight residue).  Capacity is a traced
         array on device, so round-to-round snapshots never re-trace."""
         sc = self.stream
-        requests = [PlanRequest(dag=s.remainder_dag(),
+        dags = ([self._pinned_dag(s, clock) for s in batch]
+                if sc.pin_inflight
+                else [(s.remainder_dag(), 0) for s in batch])
+        requests = [PlanRequest(dag=dag,
                                 goal=sla_goal(s.req, self.agora.goal, clock,
                                               sc),
                                 sla=s.req.sla, deadline=s.req.deadline,
                                 trace=s.trace)
-                    for s in batch]
-        return [r.plan for r in self.session.plan(requests,
-                                                  capacity=caps_round)]
+                    for s, (dag, _) in zip(batch, dags)]
+        results = self.session.plan(requests, capacity=caps_round)
+        return [self._strip_phantoms(s, r.plan, k)
+                for s, (_, k), r in zip(batch, dags, results)]
+
+    def _pinned_dag(self, s: _TenantState, clock: float) -> Tuple[DAG, int]:
+        """Remainder DAG with the tenant's still-running predecessors
+        pinned in front as ZERO-DEMAND phantom tasks of their remaining
+        duration (``pin_inflight``): the re-solve sees WHEN in-flight work
+        finishes and sequences dependents behind it via edges, while the
+        in-flight demand itself stays reserved through the residual-
+        capacity accounting — so phantoms cannot cause violations, only
+        correct timing.  Returns (dag, phantom_count); phantoms occupy the
+        first ``phantom_count`` slots and are stripped before dispatch."""
+        d0 = s.req.dag
+        rem_set = set(s.remaining)
+        live = sorted(o for o, f in s.done.items()
+                      if f > clock + 1e-9
+                      and any(a == o and b in rem_set for a, b in d0.edges))
+        k = len(live)
+        if k == 0:
+            return s.remainder_dag(), 0
+        M = self.agora.cluster.num_resources
+        phantoms = [Task(f"{d0.tasks[o].name}#inflight",
+                         [TaskOption("pinned", max(s.done[o] - clock, 1e-6),
+                                     (0.0,) * M, 0.0)])
+                    for o in live]
+        pmap = {o: i for i, o in enumerate(live)}
+        remap = {o: k + i for i, o in enumerate(s.remaining)}
+        tasks = phantoms + [d0.tasks[o] for o in s.remaining]
+        edges = [(remap[a], remap[b]) for a, b in d0.edges
+                 if a in remap and b in remap]
+        edges += [(pmap[a], remap[b]) for a, b in d0.edges
+                  if a in pmap and b in remap]
+        return DAG(d0.name, tasks, edges, release_time=0.0), k
+
+    def _strip_phantoms(self, s: _TenantState, plan: Plan, k: int) -> Plan:
+        """Drop the ``k`` leading phantom slots from a pinned plan: the
+        dispatched plan covers exactly ``s.remaining`` (phantom work is
+        already running — re-executing it would double-account), with the
+        solved starts/finishes preserved so dependents still launch after
+        their live predecessors drain."""
+        if k == 0:
+            return plan
+        problem = flatten([s.remainder_dag()],
+                          self.agora.cluster.num_resources)
+        sol = plan.solution
+        finish = np.asarray(sol.finish[k:], float).copy()
+        stripped = dataclasses.replace(
+            sol,
+            option_idx=np.asarray(sol.option_idx[k:]).copy(),
+            start=np.asarray(sol.start[k:], float).copy(),
+            finish=finish,
+            makespan=float(finish.max()) if problem.num_tasks else 0.0)
+        from repro.core.annealer import reference_point
+        return Plan(problem, stripped, plan.goal, plan.cluster,
+                    reference_point(problem, plan.cluster),
+                    joint_errors=plan.joint_errors)
 
     def _completion(self, plan: Plan) -> float:
         """Planned completion of one tenant, relative to the round start
@@ -279,11 +374,20 @@ class StreamingRunner(MultiTenantRunner):
 
     # ------------------------------------------------------------------
 
+    def _base_caps(self, clock: float) -> np.ndarray:
+        """The pool's capacity vector at ``clock`` — the static cluster
+        caps, shrunk by any chaos revocation active at that instant."""
+        caps = np.asarray(self.agora.cluster.caps, float)
+        if self._fault_plan is not None:
+            return self._fault_plan.caps_at(clock, caps)
+        return caps.copy()
+
     def _residual_caps(self, clock: float) -> np.ndarray:
         """Free capacity at ``clock``: the pool minus every in-flight task
-        committed by earlier dispatches (launched tasks run to completion,
-        so their demand is reserved until their realized finish)."""
-        caps = np.asarray(self.agora.cluster.caps, float).copy()
+        committed by earlier dispatches (launched tasks run to completion
+        — or are truncated at a revocation — so their demand is reserved
+        until their realized finish)."""
+        caps = self._base_caps(clock)
         for _, f, dem in self._executed:
             if f > clock + 1e-9:
                 caps -= dem
@@ -292,6 +396,18 @@ class StreamingRunner(MultiTenantRunner):
     def _next_release(self, clock: float) -> float:
         """Next instant at which in-flight residue frees capacity."""
         return min((f for _, f, _ in self._executed if f > clock + 1e-9),
+                   default=math.inf)
+
+    def _next_capacity_gain(self, clock: float) -> float:
+        """Next instant at which revoked capacity RETURNS (a revocation
+        expiry); ``inf`` with no chaos plan or only permanent losses.  A
+        tenant that cannot fit the revoked pool waits for this instead of
+        burning its plan-retry budget against capacity that is not
+        there."""
+        if self._fault_plan is None:
+            return math.inf
+        return min((r.until for r in self._fault_plan.cfg.revocations
+                    if math.isfinite(r.until) and r.until > clock + 1e-9),
                    default=math.inf)
 
     @staticmethod
@@ -393,8 +509,10 @@ class StreamingRunner(MultiTenantRunner):
                         records.append(self._record(s, math.inf, failed=True))
             # capacity-fragmentation guard: a tenant none of whose options
             # fit the round's free sliver waits for the next residue
-            # release instead of burning its plan-retry budget
-            release = self._next_release(clock)
+            # release — or for revoked capacity to return — instead of
+            # burning its plan-retry budget
+            release = min(self._next_release(clock),
+                          self._next_capacity_gain(clock))
             if math.isfinite(release):
                 blocked = [s for s in batch
                            if not self._structurally_fits(s, caps_round)]
@@ -457,9 +575,11 @@ class StreamingRunner(MultiTenantRunner):
                         # floor re-admitted the tenant at effectively the
                         # same clock and drained max_retries in one instant
                         delay = max(
-                            _backoff_delay(self.cfg, s.plan_retries),
+                            _backoff_delay(self.cfg, s.plan_retries,
+                                           key=_jitter_key(s.name)),
                             sc.min_requeue_delta)
-                        release = self._next_release(clock)
+                        release = min(self._next_release(clock),
+                                      self._next_capacity_gain(clock))
                         ready = max(
                             clock + delay,
                             release if math.isfinite(release) else clock)
@@ -565,7 +685,20 @@ class StreamingRunner(MultiTenantRunner):
             horizon = math.inf
             if sc.replan_on_arrival and math.isfinite(next_cut):
                 horizon = max(next_cut - clock, 0.0)
-            res = self._dispatch(clock, good, horizon)
+            # capacity revocations HARD-cut the dispatch: no FIRST launch
+            # crosses the next capacity-change instant (no exemptions, not
+            # even guaranteed tenants), so everything that would start on
+            # post-revocation capacity is withheld and re-planned against
+            # the pool that actually exists then.  This is also what makes
+            # the kill surgery in _apply_revocations causally safe: no
+            # dependent of a victim ever launched.
+            cap_change = (self._fault_plan.next_capacity_change(clock)
+                          if self._fault_plan is not None else math.inf)
+            hard = (max(cap_change - clock, 0.0)
+                    if math.isfinite(cap_change) else math.inf)
+            n_trunc = len(self._truncated)
+            res = self._dispatch(clock, good, horizon, hard)
+            kill_floors = self._apply_revocations(clock, good, res)
             if self.sink:
                 self.sink.emit(Event(
                     obs.DISPATCH, ts=clock,
@@ -583,17 +716,112 @@ class StreamingRunner(MultiTenantRunner):
                 drain_end = clock + max(res.task_finish.values())
             else:
                 # nothing cleared the horizon (all planned starts beyond
-                # it): jump to the cut so the next round makes progress
-                drain_end = next_cut
+                # the cut — or beyond the capacity change): jump forward
+                # so the next round makes progress
+                drain_end = min(next_cut, cap_change)
             # commit this round's realized intervals: later rounds reserve
             # the in-flight residue out of their planning capacity (same
-            # accounting the zero-violation gate audits)
+            # accounting the zero-violation gate audits).  Truncated
+            # windows of revocation-killed runs count too — the victims
+            # held that capacity until the kill.
             self._executed.extend(self._intervals_of(*self.dispatches[-1]))
-            requeue_at = next_cut if math.isfinite(next_cut) else drain_end
-            pending.extend(self._merge(clock, good, res, requeue_at, records))
+            self._executed.extend(self._truncated[n_trunc:])
+            requeue_at = min(next_cut, cap_change)
+            if not math.isfinite(requeue_at):
+                requeue_at = drain_end
+            requeued = self._merge(clock, good, res, requeue_at, records)
+            for s in requeued:
+                # revocation-killed work backs off past the kill instant
+                if id(s) in kill_floors:
+                    s.ready_at = max(s.ready_at, kill_floors[id(s)])
+            pending.extend(requeued)
         if self.sink:
             self.capacity_audit()
         return records
+
+    def _apply_revocations(self, clock: float, good,
+                           res: FlowResult) -> Dict[int, float]:
+        """Spot preemption against a live dispatch (tentpole 3): every
+        revocation landing inside this dispatch's window kills enough of
+        its running work — latest realized finish first — that the total
+        committed usage fits the post-revocation caps.
+
+        Victims are truncated at the revocation instant: the window they
+        actually held stays billed and audited (``self._truncated``), and
+        the task itself is simply no longer "finished" in ``res``, so
+        ``_merge`` re-enqueues it through the standard retry machinery.
+        Dependents are safe by construction — the dispatch's hard horizon
+        blocked every first launch past the first capacity change, so
+        nothing downstream of a victim ever ran.  Returns per-state
+        ``ready_at`` floors (``id(state) -> time``): killed work backs off
+        past the kill instant.
+        """
+        fp = self._fault_plan
+        floors: Dict[int, float] = {}
+        if fp is None or not res.task_finish:
+            return floors
+        # joint-slot demand vectors and owning states, in dispatch order
+        dem: List[np.ndarray] = []
+        owner: List[_TenantState] = []
+        for s, plan in good:
+            _, dem_all, _, _ = plan.problem.option_arrays()
+            oi = plan.solution.option_idx
+            for j in range(plan.problem.num_tasks):
+                dem.append(np.asarray(dem_all[j, oi[j]], float))
+                owner.append(s)
+        base = np.asarray(self.agora.cluster.caps, float)
+        prices = np.asarray(self.agora.cluster.prices_per_sec, float)
+        end = clock + max(res.task_finish.values())
+        for r in fp.revocations_in(clock, end):
+            caps_r = fp.caps_at(r.at, base)
+            # committed residue from EARLIER dispatches still running at
+            # the revocation instant (each earlier dispatch already shed
+            # its own overage when IT processed this revocation)
+            usage = np.zeros(len(base))
+            for t0, t1, d in self._executed:
+                if t0 <= r.at + 1e-9 < t1:
+                    usage = usage + d
+            active = [jj for jj in list(res.task_finish)
+                      if clock + res.task_start[jj] <= r.at + 1e-9
+                      and clock + res.task_finish[jj] > r.at + 1e-9]
+            for jj in active:
+                usage = usage + dem[jj]
+            killed: List[_TenantState] = []
+            while active and np.any(usage > caps_r + 1e-6):
+                jj = max(active, key=lambda x: (res.task_finish[x], x))
+                active.remove(jj)
+                usage = usage - dem[jj]
+                s = owner[jj]
+                t_start = clock + res.task_start[jj]
+                # the victim really held its demand until the kill: bill
+                # the truncated window and keep it in the audit sweep
+                s.cost += float((dem[jj] * prices).sum() * (r.at - t_start))
+                self._truncated.append((t_start, float(r.at), dem[jj]))
+                s.retries += 1
+                self.revocation_kills += 1
+                del res.task_finish[jj]
+                del res.task_start[jj]
+                res.task_cost.pop(jj, None)
+                killed.append(s)
+                delay = max(_backoff_delay(self.cfg, s.retries,
+                                           key=_jitter_key(s.name)),
+                            self.stream.min_requeue_delta)
+                floors[id(s)] = max(floors.get(id(s), 0.0),
+                                    float(r.at) + delay)
+                self.events.append(
+                    f"[t={r.at:9.1f}] tenant {s.name}: running task killed "
+                    f"by capacity revocation — re-enqueued")
+            if self.sink and (killed or r not in self._revoked_emitted):
+                self._revoked_emitted.add(r)
+                self.sink.emit(Event(
+                    obs.CAPACITY_REVOKED, ts=float(r.at),
+                    data={"delta": [float(d) for d in r.delta],
+                          "until": finite_or_none(r.until),
+                          "caps_after": caps_r.tolist(),
+                          "killed": len(killed),
+                          "trace_ids": sorted({s.trace for s in killed
+                                               if s.trace})}))
+        return floors
 
     def capacity_audit(self) -> Tuple[List[str], np.ndarray]:
         """Sweep every realized interval against the global caps: returns
@@ -604,8 +832,20 @@ class StreamingRunner(MultiTenantRunner):
         share."""
         caps = np.asarray(self.agora.cluster.caps, float)
         start, finish, demands = self.realized_intervals()
-        errs = capacity_violations(start, finish, demands, caps)
-        headroom = realized_headroom(start, finish, demands, caps)
+        caps_at = None
+        extra: Tuple[float, ...] = ()
+        if self._fault_plan is not None:
+            # revocation-aware sweep: capacity is a step function of time,
+            # and every revocation instant is a sweep point of its own
+            # (usage is constant there but the ceiling drops)
+            fp = self._fault_plan
+            caps_at = lambda t: fp.caps_at(t, caps)  # noqa: E731
+            extra = tuple(x for r in fp.cfg.revocations
+                          for x in (r.at, r.until) if math.isfinite(x))
+        errs = capacity_violations(start, finish, demands, caps,
+                                   caps_at=caps_at, extra_points=extra)
+        headroom = realized_headroom(start, finish, demands, caps,
+                                     caps_at=caps_at, extra_points=extra)
         if self.sink:
             now = getattr(self, "_clock", 0.0)
             for e in errs:
@@ -615,12 +855,14 @@ class StreamingRunner(MultiTenantRunner):
                 obs.CAPACITY_AUDIT, ts=now,
                 data={"headroom": headroom.tolist(),
                       "caps": caps.tolist(),
-                      "intervals": int(len(start))}))
+                      "intervals": int(len(start)),
+                      "revocation_kills": self.revocation_kills}))
         return errs, headroom
 
     # ------------------------------------------------------------------
 
-    def _dispatch(self, clock: float, good, horizon: float) -> FlowResult:
+    def _dispatch(self, clock: float, good, horizon: float,
+                  hard_horizon: float = math.inf) -> FlowResult:
         rnd = len(self.rounds)
         # guaranteed tenants launch through the cut: their plan IS the
         # deadline protection, so only lower classes yield at the horizon
@@ -633,7 +875,8 @@ class StreamingRunner(MultiTenantRunner):
                 off += p.problem.num_tasks
         fcfg = dataclasses.replace(self._tenant_cfg(f"round{rnd}", rnd),
                                    launch_horizon=horizon,
-                                   horizon_exempt=tuple(exempt))
+                                   horizon_exempt=tuple(exempt),
+                                   hard_horizon=hard_horizon)
         if self.shared_cluster:
             joint = combine_plans([p for _, p in good])
             # planned starts gate launches: the joint schedule's staggering
@@ -702,9 +945,13 @@ class StreamingRunner(MultiTenantRunner):
                 # unlaunched remainder: back to the control plane, eligible
                 # at the cut — but never before its own in-flight
                 # predecessors drain (re-planning a task ahead of a live
-                # pred would break causality)
-                s.ready_at = max(requeue_at,
-                                 max(s.done.values(), default=0.0))
+                # pred would break causality).  Under pin_inflight the
+                # drain wait is dropped: live predecessors ride the next
+                # solve as pinned phantoms instead.
+                floor = max(s.done.values(), default=0.0)
+                if self.stream.pin_inflight:
+                    floor = 0.0
+                s.ready_at = max(requeue_at, floor)
                 requeue.append(s)
             else:
                 records.append(self._record(s, max(s.done.values())))
@@ -772,10 +1019,13 @@ class StreamingRunner(MultiTenantRunner):
 
     def realized_intervals(self):
         """All executed task intervals across rounds, on the absolute
-        clock: (start (N,), finish (N,), demands (N, M)).  The zero-
-        violation gate sweeps these against the global capacity vector."""
+        clock: (start (N,), finish (N,), demands (N, M)) — including the
+        truncated windows of revocation-killed runs, which held capacity
+        until the kill.  The zero-violation gate sweeps these against the
+        (possibly time-varying) capacity."""
         triples = [t for disp in self.dispatches
                    for t in self._intervals_of(*disp)]
+        triples.extend(self._truncated)
         M = self.agora.cluster.num_resources
         if not triples:
             return (np.zeros(0), np.zeros(0), np.zeros((0, M)))
@@ -784,16 +1034,32 @@ class StreamingRunner(MultiTenantRunner):
                 np.asarray([t[2] for t in triples]))
 
 
+def _sweep_points(start: np.ndarray, finish: np.ndarray,
+                  extra_points: Sequence[float] = ()) -> np.ndarray:
+    """Every instant at which realized usage OR capacity can change."""
+    pts = [start, finish]
+    if len(extra_points):
+        pts.append(np.asarray(extra_points, float))
+    return np.unique(np.concatenate(pts)) if pts else np.zeros(0)
+
+
 def capacity_violations(start: np.ndarray, finish: np.ndarray,
-                        demands: np.ndarray, caps: np.ndarray) -> List[str]:
-    """Event-exact sweep of realized intervals against the global caps."""
+                        demands: np.ndarray, caps: np.ndarray,
+                        caps_at=None,
+                        extra_points: Sequence[float] = ()) -> List[str]:
+    """Event-exact sweep of realized intervals against the capacity.
+
+    ``caps_at(t)`` optionally supplies a TIME-VARYING capacity vector
+    (chaos revocations); ``extra_points`` adds sweep instants where the
+    ceiling moves without any task starting or finishing."""
     errs: List[str] = []
-    for pt in np.unique(np.concatenate([start, finish])):
+    for pt in _sweep_points(start, finish, extra_points):
         active = (start <= pt + 1e-12) & (pt + 1e-12 < finish)
         usage = (demands[active].sum(axis=0) if active.any()
                  else np.zeros(len(caps)))
-        if np.any(usage > caps + 1e-6):
-            over = np.flatnonzero(usage > caps + 1e-6)
+        cap_t = caps if caps_at is None else np.asarray(caps_at(pt), float)
+        if np.any(usage > cap_t + 1e-6):
+            over = np.flatnonzero(usage > cap_t + 1e-6)
             errs.append(f"realized capacity violated at t={pt} "
                         f"(resources {over.tolist()})")
             break
@@ -801,15 +1067,23 @@ def capacity_violations(start: np.ndarray, finish: np.ndarray,
 
 
 def realized_headroom(start: np.ndarray, finish: np.ndarray,
-                      demands: np.ndarray, caps: np.ndarray) -> np.ndarray:
+                      demands: np.ndarray, caps: np.ndarray,
+                      caps_at=None,
+                      extra_points: Sequence[float] = ()) -> np.ndarray:
     """Realized capacity headroom: elementwise min over the run's event
-    points of ``caps - usage`` (the full caps when nothing executed)."""
+    points of ``caps - usage`` (the full caps when nothing executed).
+    With ``caps_at`` the minuend is the effective capacity at each sweep
+    point, so revocation windows show up as shrunken headroom."""
     caps = np.asarray(caps, float)
     head = caps.copy()
-    for pt in np.unique(np.concatenate([start, finish])):
+    for pt in _sweep_points(start, finish, extra_points):
         active = (start <= pt + 1e-12) & (pt + 1e-12 < finish)
-        if active.any():
-            head = np.minimum(head, caps - demands[active].sum(axis=0))
+        if active.any() or caps_at is not None:
+            cap_t = (caps if caps_at is None
+                     else np.asarray(caps_at(pt), float))
+            usage = (demands[active].sum(axis=0) if active.any()
+                     else np.zeros(len(caps)))
+            head = np.minimum(head, cap_t - usage)
     return head
 
 

@@ -24,15 +24,20 @@ from repro.obs.events import (
     DROP,
     ENVELOPE_WIDENED,
     EVENT_TYPES,
+    FAULT_INJECTED,
     PLAN_SOLVED,
+    POOL_DEGRADED,
+    POOL_RECOVERED,
     PREEMPT,
     SCHEMA_VERSION,
+    CAPACITY_REVOKED,
     Event,
     event_from_json,
     read_jsonl,
 )
 from repro.obs.sink import (
     NULL,
+    GuardedSink,
     JsonlSink,
     NullSink,
     RingSink,
@@ -45,11 +50,13 @@ from repro.obs.sink import (
 
 __all__ = [
     "ADMISSION_DECISION", "BUCKET_TRACED", "CACHE_HIT", "CAPACITY_AUDIT",
-    "CAPACITY_VIOLATION", "DEADLINE_HIT", "DEADLINE_MISS", "DEFER",
-    "DISPATCH", "DROP", "ENVELOPE_WIDENED", "EVENT_TYPES", "PLAN_SOLVED",
-    "PREEMPT", "SCHEMA_VERSION", "Event", "event_from_json", "read_jsonl",
-    "NULL", "JsonlSink", "NullSink", "RingSink", "Sink", "TagSink",
-    "TeeSink", "as_sink", "replay",
+    "CAPACITY_REVOKED", "CAPACITY_VIOLATION", "DEADLINE_HIT",
+    "DEADLINE_MISS", "DEFER", "DISPATCH", "DROP", "ENVELOPE_WIDENED",
+    "EVENT_TYPES", "FAULT_INJECTED", "PLAN_SOLVED", "POOL_DEGRADED",
+    "POOL_RECOVERED", "PREEMPT", "SCHEMA_VERSION", "Event",
+    "event_from_json", "read_jsonl",
+    "NULL", "GuardedSink", "JsonlSink", "NullSink", "RingSink", "Sink",
+    "TagSink", "TeeSink", "as_sink", "replay",
     "EventAggregator", "finite_or_none",
     "MISSING_ARTIFACT", "load_artifact", "missing_artifact",
 ]

@@ -65,6 +65,11 @@ class EventAggregator(Sink):
         self.warmup_traces = 0             # warming bucket_traced
         self.cache_hits = 0
         self.violations = 0
+        # fault-tolerance plane: chaos injections, spot revocations, and
+        # the set of pools currently serving degraded (greedy) plans
+        self.faults = 0
+        self.revocations = 0
+        self.degraded_pools: set = set()
         self.headroom: Optional[List[float]] = None   # elementwise min
         self.latencies: List[float] = []   # submit-to-plan wall seconds
         # pool -> counter dict (plans/traces/cache_hits/served/...)
@@ -125,6 +130,20 @@ class EventAggregator(Sink):
             self.profiles.extend(dict(p) for p in e.data.get("profiles", ()))
             if pool is not None:
                 pool["solve_profiles"] += 1
+        elif e.type == ev.FAULT_INJECTED:
+            self.faults += 1
+            if pool is not None:
+                pool["faults"] += 1
+        elif e.type == ev.POOL_DEGRADED:
+            self.degraded_pools.add(e.pool or "")
+            if pool is not None:
+                pool["degraded_events"] += 1
+        elif e.type == ev.POOL_RECOVERED:
+            self.degraded_pools.discard(e.pool or "")
+            if pool is not None:
+                pool["recovered_events"] += 1
+        elif e.type == ev.CAPACITY_REVOKED:
+            self.revocations += 1
         elif e.type == ev.CAPACITY_VIOLATION:
             self.violations += 1
         elif e.type == ev.CAPACITY_AUDIT:
@@ -204,6 +223,9 @@ class EventAggregator(Sink):
                 "cache_hits": self.cache_hits,
                 "deadline": deadline,
                 "violations": self.violations,
+                "faults": self.faults,
+                "revocations": self.revocations,
+                "degraded_pools": sorted(self.degraded_pools),
                 "headroom": self.headroom,
                 "latency": self.latency_percentiles(),
                 "convergence": self.convergence_stats(),

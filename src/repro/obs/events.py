@@ -51,12 +51,18 @@ DEADLINE_MISS = "deadline_miss"        # terminal per-tenant verdict
 ENVELOPE_WIDENED = "envelope_widened"  # batch exited the warmed envelope
 SUBMIT = "submit"                      # request accepted at the front door
 FLUSH = "flush"                        # a queued batch left for the solve
+#   fault-tolerance layer (chaos harness / supervised pools)
+FAULT_INJECTED = "fault_injected"      # the chaos harness fired one fault
+POOL_DEGRADED = "pool_degraded"        # circuit breaker opened: greedy plans
+POOL_RECOVERED = "pool_recovered"      # half-open probe solved: breaker shut
+CAPACITY_REVOKED = "capacity_revoked"  # spot preemption shrank the caps
 
 EVENT_TYPES = (
     PLAN_SOLVED, BUCKET_TRACED, CACHE_HIT, ADMISSION_DECISION,
     SOLVE_PROFILE,
     DISPATCH, DEFER, PREEMPT, DROP, CAPACITY_VIOLATION, CAPACITY_AUDIT,
     DEADLINE_HIT, DEADLINE_MISS, ENVELOPE_WIDENED, SUBMIT, FLUSH,
+    FAULT_INJECTED, POOL_DEGRADED, POOL_RECOVERED, CAPACITY_REVOKED,
 )
 
 

@@ -10,6 +10,14 @@ constructs the event — the near-zero-cost requirement the serving stack's
 hot paths rely on.  Real sinks are truthy and thread-safe: sessions emit
 under their own lock, but the daemon's pools and widen/warmup threads emit
 concurrently into one sink.
+
+Fault isolation: a raising sink (disk-full ``JsonlSink``, a buggy
+operator callback) must never break the serving path.  ``as_sink`` wraps
+every caller-supplied sink in a ``GuardedSink`` — emission errors are
+swallowed and COUNTED (``.errors``), never propagated into a solve — and
+``TeeSink`` isolates its fan-out per branch, so one poisoned consumer
+cannot starve the others (the daemon's internal aggregator keeps folding
+while an operator's file sink fails).
 """
 from __future__ import annotations
 
@@ -55,8 +63,55 @@ class NullSink(Sink):
 NULL = NullSink()
 
 
+class GuardedSink(Sink):
+    """Fault-isolation wrapper: ``emit`` never raises.  A sink failure on
+    the serving path is counted on ``.errors`` (and the first exception
+    kept on ``.last_error``) instead of breaking the plan that was being
+    narrated.  Unknown attributes delegate to the wrapped sink, so test
+    introspection (``sink.events`` on a ring) keeps working through the
+    guard; truthiness follows the inner sink so ``if sink:`` emission
+    guards still short-circuit the disabled plane."""
+
+    def __init__(self, inner: Sink):
+        # collapse nested guards: one error counter per emission path
+        while isinstance(inner, GuardedSink):
+            inner = inner.inner
+        self.inner = inner
+        self.errors = 0
+        self.last_error: Optional[BaseException] = None
+
+    def emit(self, event: Event) -> None:
+        try:
+            self.inner.emit(event)
+        except Exception as exc:  # noqa: BLE001 — isolation is the point
+            self.errors += 1
+            if self.last_error is None:
+                self.last_error = exc
+
+    def close(self) -> None:
+        try:
+            self.inner.close()
+        except Exception as exc:  # noqa: BLE001
+            self.errors += 1
+            if self.last_error is None:
+                self.last_error = exc
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def __bool__(self) -> bool:
+        return bool(self.inner)
+
+
 def as_sink(sink: Optional[Sink]) -> Sink:
-    return NULL if sink is None else sink
+    """Normalize a caller-supplied sink for a serving layer: ``None``
+    becomes the falsy no-op, anything else is guarded so its failures
+    cannot break the serving path."""
+    if sink is None:
+        return NULL
+    if isinstance(sink, (NullSink, GuardedSink)):
+        return sink
+    return GuardedSink(sink)
 
 
 class RingSink(Sink):
@@ -94,6 +149,9 @@ class JsonlSink(Sink):
         # shutdown. They are dropped (the file is gone) but COUNTED, so
         # operators can see the tape is short rather than trust it blindly.
         self.dropped = 0
+        # write/flush failures (disk full, rotated-away file): the event is
+        # lost but the serving path is not — counted, never raised
+        self.errors = 0
 
     def emit(self, event: Event) -> None:
         line = json.dumps(event.to_json())
@@ -101,11 +159,14 @@ class JsonlSink(Sink):
             if self._f.closed:
                 self.dropped += 1
                 return
-            self._f.write(line + "\n")
-            self._since_flush += 1
-            if self._since_flush >= self._flush_every:
-                self._f.flush()
-                self._since_flush = 0
+            try:
+                self._f.write(line + "\n")
+                self._since_flush += 1
+                if self._since_flush >= self._flush_every:
+                    self._f.flush()
+                    self._since_flush = 0
+            except OSError:
+                self.errors += 1
 
     def close(self) -> None:
         with self._lock:
@@ -116,14 +177,20 @@ class JsonlSink(Sink):
 
 class TeeSink(Sink):
     """Fan one emission out to several sinks (e.g. the daemon's internal
-    aggregator plus an operator-supplied JSON-lines file)."""
+    aggregator plus an operator-supplied JSON-lines file).  Branches are
+    fault-isolated: one raising consumer is counted on ``.errors`` and the
+    remaining branches still receive the event."""
 
     def __init__(self, *sinks: Optional[Sink]):
         self.sinks = tuple(s for s in sinks if s)
+        self.errors = 0
 
     def emit(self, event: Event) -> None:
         for s in self.sinks:
-            s.emit(event)
+            try:
+                s.emit(event)
+            except Exception:  # noqa: BLE001 — isolation per branch
+                self.errors += 1
 
     def close(self) -> None:
         for s in self.sinks:

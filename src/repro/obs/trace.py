@@ -114,7 +114,8 @@ def render_trace(events: Iterable[Event], trace_id: str) -> str:
         extras = []
         for key in ("reason", "cause", "admitted", "bucket", "traced",
                     "warm", "n", "deadline", "completion", "steps_to_best",
-                    "mode"):
+                    "mode", "kind", "state", "delay_s", "degraded",
+                    "killed", "caps_after"):
             if key in e.data:
                 extras.append(f"{key}={e.data[key]}")
         where = f" pool={e.pool}" if e.pool else ""

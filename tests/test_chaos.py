@@ -1,0 +1,372 @@
+"""Fault-tolerant serving plane invariants (``repro.flow.chaos`` + the
+supervision/degradation/revocation machinery it exercises).
+
+The chaos harness is deterministic: a seeded ``FaultPlan`` returns the
+same fault sequence per config on every run, and the revocation timeline
+lives on the virtual clock.  Contracts under test: the chaos-disabled
+path is bit-for-bit identical to the pre-chaos code; sink failures never
+reach the serving path; the executor kills-and-retries work on revoked
+capacity without ever over-committing; the streaming control plane
+replans around a revocation with zero violations against the
+time-varying ceiling; the daemon supervises raising solves (restart +
+retry), degrades through the circuit breaker instead of shedding, and
+recovers through the half-open probe; and a service shut down MID-FAULT
+resolves every in-flight future loudly (no stranded awaiters).
+"""
+import asyncio
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster.catalog import Cluster, InstanceType
+from repro.core.agora import Agora
+from repro.core.dag import DAG, Task, TaskOption
+from repro.core.objectives import Goal
+from repro.core.session import PlanRequest, PlanResult
+from repro.core.vectorized import VecConfig
+from repro.flow.chaos import (ChaosConfig, FaultPlan, FaultySink,
+                              InjectedFault, Revocation)
+from repro.flow.daemon import (DaemonConfig, PlannerService, PlanServiceError,
+                               PoolSpec)
+from repro.flow.executor import FlowConfig, FlowRunner, _backoff_delay
+from repro.flow.streaming import (SLA_BEST_EFFORT, SLA_GUARANTEED,
+                                  StreamConfig, StreamingRunner,
+                                  TenantRequest, capacity_violations)
+from repro.obs.events import Event
+from repro.obs.sink import GuardedSink, RingSink, TeeSink, as_sink
+
+CFG = VecConfig(chains=8, iters=40, grid=64, seed=0)
+
+
+def _cluster(caps=(4.0,)):
+    return Cluster(tuple(InstanceType(f"r{m}", 1, 1, 3.6)
+                         for m in range(len(caps))), tuple(caps))
+
+
+def _agora(cluster):
+    return Agora(cluster, goal=Goal.balanced(), solver="vectorized",
+                 vec_cfg=CFG)
+
+
+def _chain_dag(name, n, dur=50.0, dem=2.0, t0=0.0, price=3.6):
+    tasks = [Task(f"t{i}", [TaskOption("o", dur, (dem,), dur * dem * price)])
+             for i in range(n)]
+    return DAG(name, tasks, [(i, i + 1) for i in range(n - 1)],
+               release_time=t0)
+
+
+# ---------------------------------------------------------------------------
+# the fault plan itself
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_deterministic_per_config():
+    cfg = ChaosConfig(seed=7, solver_error_rate=0.3, latency_spike_rate=0.4)
+
+    def sequence():
+        plan = cfg.compile()
+        return [(v.kind, v.delay_s) if v else None
+                for v in (plan.solve_fault() for _ in range(20))]
+
+    a, b = sequence(), sequence()
+    # draw-indexed: the k-th verdict is a pure function of (config, k)
+    assert a == b
+    assert any(v is not None for v in a)
+    assert any(v is None for v in a)
+    # a different seed decorrelates the stream
+    other = ChaosConfig(seed=8, solver_error_rate=0.3,
+                        latency_spike_rate=0.4).compile()
+    assert a != [(v.kind, v.delay_s) if v else None
+                 for v in (other.solve_fault() for _ in range(20))]
+
+
+def test_explicit_solve_indices_and_disabled_config():
+    plan = ChaosConfig(solver_error_solves=(1, 3)).compile()
+    verdicts = [plan.solve_fault() for _ in range(5)]
+    assert [v.kind if v else None for v in verdicts] \
+        == [None, "error", None, "error", None]
+    assert not ChaosConfig().enabled
+    clean = ChaosConfig().compile()
+    assert all(clean.solve_fault() is None for _ in range(10))
+    assert not clean.sink_fault()
+
+
+def test_capacity_timeline_composes_and_expires():
+    plan = ChaosConfig(revocations=(
+        Revocation(at=10.0, delta=(2.0, 0.0), duration=20.0),
+        Revocation(at=20.0, delta=(1.0, 3.0)),
+    )).compile()
+    base = np.array([4.0, 4.0])
+    assert np.allclose(plan.caps_at(5.0, base), [4.0, 4.0])
+    assert np.allclose(plan.caps_at(10.0, base), [2.0, 4.0])
+    assert np.allclose(plan.caps_at(25.0, base), [1.0, 1.0])  # overlap
+    assert np.allclose(plan.caps_at(35.0, base), [3.0, 1.0])  # first expired
+    # floored at zero, never negative
+    assert np.all(plan.caps_at(25.0, np.array([0.5, 0.5])) >= 0.0)
+    assert [r.at for r in plan.revocations_in(0.0, 15.0)] == [10.0]
+    assert plan.next_capacity_change(0.0) == 10.0
+    assert plan.next_capacity_change(10.0) == 20.0
+    assert plan.next_capacity_change(20.0) == 30.0     # first expiry
+    assert plan.next_capacity_change(30.0) == math.inf
+
+
+# ---------------------------------------------------------------------------
+# sink fault isolation (obs plane)
+# ---------------------------------------------------------------------------
+
+
+def test_guarded_sink_isolates_emission_failures():
+    faulty = FaultySink()                      # every emission raises
+    guard = as_sink(faulty)
+    assert isinstance(guard, GuardedSink)
+    for _ in range(3):
+        guard.emit(Event("submit", ts=0.0))    # must not raise
+    assert guard.errors == 3
+    assert isinstance(guard.last_error, InjectedFault)
+    # scheduled faults: only the planned emissions raise
+    plan = ChaosConfig(seed=1, sink_error_rate=0.5).compile()
+    ring = RingSink()
+    guard2 = as_sink(FaultySink(plan, inner=ring))
+    for i in range(40):
+        guard2.emit(Event("submit", ts=float(i)))
+    assert guard2.errors == plan.injected["sink_error"] > 0
+    assert len(ring) == 40 - guard2.errors
+
+
+def test_tee_sink_isolates_per_branch():
+    ring = RingSink()
+    tee = TeeSink(FaultySink(), ring)
+    for i in range(4):
+        tee.emit(Event("submit", ts=float(i)))
+    # the healthy branch saw every event despite its sibling raising
+    assert len(ring) == 4
+    assert tee.errors == 4
+
+
+# ---------------------------------------------------------------------------
+# executor: revocation kills + seeded backoff jitter
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_jitter_deterministic_and_default_off():
+    c0 = FlowConfig(retry_backoff=10.0)
+    assert _backoff_delay(c0, 3) == 40.0       # bit-for-bit without jitter
+    assert _backoff_delay(c0, 3, key=99) == 40.0
+    cj = FlowConfig(retry_backoff=10.0, retry_jitter=0.25)
+    d1 = _backoff_delay(cj, 3, key=7)
+    assert d1 == _backoff_delay(cj, 3, key=7)  # seeded, reproducible
+    assert 40.0 < d1 <= 50.0                   # multiplicative [1, 1+j]
+    assert _backoff_delay(cj, 3, key=8) != d1  # decorrelated across tasks
+
+
+def test_executor_kills_and_relaunches_on_revocation():
+    cluster = _cluster()
+    plan = _agora(cluster).plan([_chain_dag("a", 3), _chain_dag("b", 3)])
+    chaos = ChaosConfig(revocations=(
+        Revocation(at=25.0, delta=(2.0,), duration=100.0),))
+    cfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False,
+                     chaos=chaos, max_retries=20)
+    runner = FlowRunner(plan, cfg)
+    res = runner.run()
+    assert res.kills == 1 and res.retries >= 1
+    assert len(res.task_finish) == plan.problem.num_tasks
+    log = "\n".join(runner.events)
+    assert "killed: capacity revoked" in log
+    # the killed task re-entered through the capacity gate, not a free pass
+    assert "waits for pool capacity" in log
+    # chaos-disabled bit-for-bit: no chaos at all vs an inert ChaosConfig
+    base = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    inert = dataclasses.replace(base, chaos=ChaosConfig())
+    r1 = FlowRunner(plan, base).run()
+    r2 = FlowRunner(plan, inert).run()
+    assert r1.task_finish == r2.task_finish and r1.cost == r2.cost
+    assert r1.kills == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming: capacity-revocation replanning
+# ---------------------------------------------------------------------------
+
+
+def _stream_requests(cluster):
+    price = float(cluster.prices_per_sec[0])
+    return [
+        TenantRequest(_chain_dag("be", 6, 50.0, 2.0, 0.0, price),
+                      sla=SLA_BEST_EFFORT),
+        TenantRequest(_chain_dag("g", 2, 50.0, 3.0, 40.0, price),
+                      sla=SLA_GUARANTEED, deadline=40.0 + 130.0),
+    ]
+
+
+def test_streaming_replans_around_revocation():
+    cluster = _cluster()
+    fcfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    chaos = ChaosConfig(revocations=(
+        Revocation(at=25.0, delta=(3.0,), duration=60.0),))
+    sink = RingSink()
+    runner = StreamingRunner(_agora(cluster), _stream_requests(cluster),
+                             fcfg, StreamConfig(chaos=chaos), sink=sink)
+    records = runner.run()
+    # the kill happened, every tenant still reached a terminal record
+    assert runner.revocation_kills >= 1
+    assert len(runner._truncated) == runner.revocation_kills
+    assert {r.name for r in records} == {"be", "g"}
+    assert not any(r.failed for r in records)
+    # zero violations against the TIME-VARYING ceiling (the audit sweeps
+    # caps_at(t), not the static vector, when a fault plan is attached)
+    errs, headroom = runner.capacity_audit()
+    assert errs == []
+    assert headroom[0] <= 1.0 + 1e-6           # the shrunken window binds
+    s, f, d = runner.realized_intervals()
+    fp = chaos.compile()
+    caps = np.asarray(cluster.caps, float)
+    assert capacity_violations(
+        s, f, d, caps, caps_at=lambda t: fp.caps_at(t, caps),
+        extra_points=(25.0, 85.0)) == []
+    # revocation event carries the killed tenants' causal trace ids
+    rev = [e for e in sink.events if e.type == "capacity_revoked"]
+    assert rev and rev[0].data["killed"] >= 1
+    assert rev[0].data["trace_ids"]
+
+
+def test_streaming_chaos_disabled_bit_for_bit():
+    cluster = _cluster()
+    fcfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+
+    def fingerprint(sc):
+        r = StreamingRunner(_agora(cluster), _stream_requests(cluster),
+                            fcfg, sc)
+        return tuple((x.name, x.finished, x.cost, x.retries, x.deadline_met)
+                     for x in r.run())
+
+    base = fingerprint(StreamConfig())
+    assert base == fingerprint(StreamConfig(chaos=None))
+    assert base == fingerprint(StreamConfig(chaos=ChaosConfig()))
+
+
+def test_pin_inflight_accounts_every_task_exactly_once():
+    cluster = _cluster()
+    fcfg = FlowConfig(mode="sim", enforce_capacity=True, speculation=False)
+    runner = StreamingRunner(_agora(cluster), _stream_requests(cluster),
+                             fcfg, StreamConfig(pin_inflight=True))
+    records = runner.run()
+    assert {r.name for r in records} == {"be", "g"}
+    assert not any(r.failed for r in records)
+    # exactly-once: realized intervals count matches the task total
+    s, f, d = runner.realized_intervals()
+    assert len(s) == sum(r.dag.num_tasks for r in runner.requests)
+    assert capacity_violations(s, f, d, np.asarray(cluster.caps)) == []
+
+
+# ---------------------------------------------------------------------------
+# daemon: supervision, breaker degradation, probe recovery, shutdown
+# ---------------------------------------------------------------------------
+
+
+def _chaos_service(chaos, **kw):
+    kw.setdefault("pools", (PoolSpec("shared", shared_capacity=True,
+                                     bucket_p=True),))
+    kw.setdefault("max_batch", 1)
+    kw.setdefault("max_wait_s", 0.01)
+    svc = PlannerService(_agora(_cluster()), DaemonConfig(chaos=chaos, **kw))
+    svc.warmup(_chain_dag("tmpl", 2, 2.0, 1.0))
+    return svc
+
+
+def test_daemon_trips_degrades_and_recovers():
+    sink = RingSink()
+    svc = _chaos_service(ChaosConfig(solver_error_solves=(0, 1, 2, 3)),
+                         breaker_threshold=2, breaker_cooldown_s=0.05,
+                         solve_retries=1, sink=sink)
+
+    async def drive():
+        out = []
+        async with svc:
+            for i in range(5):
+                out.append(await svc.submit(
+                    PlanRequest(dag=_chain_dag(f"d{i}", 2, 2.0, 1.0))))
+                await asyncio.sleep(0.08)
+        return out
+
+    res = asyncio.run(drive())
+    assert all(isinstance(r, PlanResult) for r in res)
+    assert all(r.plan.validate() == [] for r in res)
+    flags = [r.degraded for r in res]
+    assert any(flags) and not flags[-1]        # degraded, then recovered
+    st = svc.stats()
+    assert st["degraded_served"] >= 1
+    assert st["pool_restarts"] >= 1            # supervisor rebuilt the pool
+    assert st["faults_injected"] == 4
+    assert st["pools"]["shared"]["breaker"] == "closed"
+    # pool restarts recycle the EXECUTOR, never the warmed session: the
+    # zero-retrace contract survives supervision
+    assert st["events"]["retraces"] == 0
+    types = {e.type for e in sink.events}
+    assert {"fault_injected", "pool_degraded", "pool_recovered"} <= types
+
+
+def test_daemon_without_degradation_fails_loudly_not_silently():
+    svc = _chaos_service(ChaosConfig(solver_error_solves=(0, 1)),
+                         solve_retries=1, degraded_serve=False)
+
+    async def drive():
+        async with svc:
+            with pytest.raises(PlanServiceError) as err:
+                await svc.submit(PlanRequest(dag=_chain_dag("d", 2, 2.0,
+                                                            1.0)))
+            # the injected fault is the reported cause, not a mystery
+            assert isinstance(err.value.cause, InjectedFault)
+            ok = await svc.submit(PlanRequest(dag=_chain_dag("ok", 2, 2.0,
+                                                             1.0)))
+            return ok
+
+    ok = asyncio.run(drive())
+    assert isinstance(ok, PlanResult) and not ok.degraded
+    assert svc.stats()["errors"] == 2
+
+
+def test_daemon_shutdown_mid_fault_strands_no_futures():
+    """Satellite regression: exiting the service while every solve raises
+    must resolve ALL in-flight futures (result or loud error) — an
+    awaiter left pending forever is the one unacceptable outcome."""
+    svc = _chaos_service(ChaosConfig(solver_error_rate=1.0),
+                         solve_retries=0, degraded_serve=False,
+                         max_batch=2, max_wait_s=0.05)
+
+    async def drive():
+        async with svc:
+            futs = [asyncio.ensure_future(svc.submit(
+                PlanRequest(dag=_chain_dag(f"d{i}", 2, 2.0, 1.0))))
+                for i in range(4)]
+            done, pending = await asyncio.wait(futs, timeout=30.0)
+            return done, pending
+
+    done, pending = asyncio.run(drive())
+    assert not pending                         # nothing stranded
+    for fut in done:
+        assert isinstance(fut.exception(), PlanServiceError)
+
+
+def test_daemon_degraded_serving_survives_total_solver_outage():
+    """With the breaker open and every solve raising, the service still
+    answers every request via the greedy fallback — flagged, never
+    silent."""
+    sink = RingSink()
+    svc = _chaos_service(ChaosConfig(solver_error_rate=1.0),
+                         solve_retries=0, breaker_threshold=1,
+                         breaker_cooldown_s=60.0, sink=sink)
+
+    async def drive():
+        async with svc:
+            return [await svc.submit(
+                PlanRequest(dag=_chain_dag(f"d{i}", 2, 2.0, 1.0)))
+                for i in range(3)]
+
+    res = asyncio.run(drive())
+    assert all(isinstance(r, PlanResult) for r in res)
+    assert all(r.degraded for r in res)
+    assert all(r.plan.validate() == [] for r in res)
+    assert svc.stats()["degraded_served"] == 3
+    assert svc.stats()["pools"]["shared"]["breaker"] == "open"

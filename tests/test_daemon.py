@@ -301,3 +301,51 @@ def test_http_adapter_end_to_end():
     assert 'planner_latency_seconds{quantile="0.5"}' in mtext
     assert 'planner_pool_plans_total{pool="shared"}' in mtext
     assert lost[0] == 404
+
+
+def test_http_hardening_rejects_slow_and_oversized_clients():
+    """Protocol hardening: a stalled peer gets 408 instead of pinning the
+    handler, an oversized Content-Length gets 413 BEFORE the body is
+    read, and a garbage request line gets 400 — all on a live service."""
+    svc = _service(max_wait_s=0.2)
+    svc.warmup(_chain_dag("tmpl"), max_p=2)
+
+    async def raw_exchange(host, port, payload):
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(payload)
+        await writer.drain()
+        raw = await reader.read()
+        writer.close()
+        head, _, data = raw.partition(b"\r\n\r\n")
+        return int(head.split(b" ", 2)[1]), json.loads(data)
+
+    async def drive():
+        http = PlannerHTTPServer(svc, read_timeout_s=0.2, max_body=256)
+        async with svc:
+            host, port = await http.start()
+            # 400: malformed request line
+            garbage = await raw_exchange(host, port, b"NONSENSE\r\n\r\n")
+            # 413: declared body over max_body; the handler must answer
+            # from the headers alone (no body bytes are ever sent)
+            huge = await raw_exchange(
+                host, port,
+                f"POST /v1/plan HTTP/1.1\r\nHost: {host}\r\n"
+                f"Content-Length: 999999\r\n\r\n".encode())
+            # 408: open the connection, send half a request, then stall
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write(b"POST /v1/plan HTTP/1.1\r\n")
+            await writer.drain()
+            raw = await asyncio.wait_for(reader.read(), timeout=5.0)
+            writer.close()
+            head, _, data = raw.partition(b"\r\n\r\n")
+            stalled = int(head.split(b" ", 2)[1]), json.loads(data)
+            # the service is still healthy afterwards
+            ok = await _http(host, port, "GET", "/healthz")
+            await http.stop()
+            return garbage, huge, stalled, ok
+
+    garbage, huge, stalled, ok = asyncio.run(drive())
+    assert garbage[0] == 400 and "malformed" in garbage[1]["error"]
+    assert huge[0] == 413 and "max_body" in huge[1]["error"]
+    assert stalled[0] == 408 and "not received" in stalled[1]["error"]
+    assert ok == (200, {"ok": True, "running": True})
