@@ -527,7 +527,9 @@ class PlannerSession:
                        warming: bool = False,
                        trace_ids: Optional[List[str]] = None) -> None:
         """Exactly one of ``bucket_traced`` / ``cache_hit`` per engine
-        dispatch (call sites guard with ``if self.sink:``)."""
+        dispatch."""
+        if not self.sink:
+            return
         data = {"bucket": bucket, "seconds": seconds, "warming": warming}
         if jmax is not None:
             data["jmax"], data["omax"] = jmax, omax

@@ -38,7 +38,7 @@ from repro.obs.events import Event
 from repro.obs.trace import TraceIds
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class FlowConfig:
     mode: str = "sim"                  # "sim" | "real"
     max_retries: int = 2
@@ -280,13 +280,15 @@ class FlowRunner:
             running.setdefault(j, []).append(run)
             usage = usage + task_dem[j]
             if self.cfg.mode == "real" and j in self.fns:
-                t0 = time.monotonic()
+                # real mode runs user callables on the host: measured wall
+                # durations ARE the ground truth here, not virtual time
+                t0 = time.monotonic()  # agoralint: allow[determinism] real-mode wall measurement
                 try:
                     self.fns[j]()
-                    dur = time.monotonic() - t0
+                    dur = time.monotonic() - t0  # agoralint: allow[determinism] real-mode wall
                     fail = False
                 except Exception as e:  # noqa: BLE001
-                    dur = time.monotonic() - t0
+                    dur = time.monotonic() - t0  # agoralint: allow[determinism] real-mode wall
                     fail = True
                     self._log(clock, f"task {j} raised: {e}")
                 run.expected_end = clock + dur

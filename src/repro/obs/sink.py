@@ -226,6 +226,7 @@ def replay(events: Iterable[Event], sink: Sink) -> int:
     the number of events replayed."""
     n = 0
     for e in events:
+        # agoralint: allow[sink-discipline] replay utility: caller passes a live sink on purpose
         sink.emit(e)
         n += 1
     return n

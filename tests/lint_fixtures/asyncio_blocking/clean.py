@@ -1,0 +1,21 @@
+"""Fixture: the sanctioned executor/asyncio patterns."""
+import asyncio
+import threading
+import time
+
+
+class Service:
+    def __init__(self, session):
+        self.session = session
+        self._lock = threading.Lock()
+
+    async def submit(self, loop, request):
+        await asyncio.sleep(0.01)
+        return await loop.run_in_executor(
+            None, lambda: self.session.plan(request))
+
+    def sync_path(self, request):
+        # blocking is fine off the event loop
+        self._lock.acquire()
+        time.sleep(0.0)
+        return self.session.plan(request)

@@ -1,0 +1,15 @@
+"""Fixture: blocking calls directly on the event loop (parsed only)."""
+import threading
+import time
+
+
+class Service:
+    def __init__(self, session):
+        self.session = session
+        self._lock = threading.Lock()
+
+    async def submit(self, request):
+        self._lock.acquire()
+        result = self.session.plan(request)
+        time.sleep(0.1)
+        return result

@@ -1,0 +1,12 @@
+"""Fixture: asyncio-blocking exceptions carrying reasons."""
+import time
+
+
+class Service:
+    def __init__(self, session):
+        self.session = session
+
+    async def submit(self, request):
+        time.sleep(0.0)  # agoralint: allow[asyncio-blocking] zero-delay yield probe in a test rig
+        # agoralint: allow[asyncio-blocking] admit is lock-free O(1) on this session subclass
+        return self.session.admit(request)

@@ -1,0 +1,10 @@
+"""Fixture: wall-clock reads OUTSIDE repro/{core,flow} are not in scope."""
+import time
+
+
+def stamp():
+    return time.time()
+
+
+def tick():
+    return time.monotonic()

@@ -1,0 +1,11 @@
+"""Fixture: deterministic clock/randomness idioms the rule accepts."""
+import numpy as np
+
+
+def tick(clock):
+    return clock()
+
+
+def jitter(seed):
+    rng = np.random.default_rng([seed, 0x51])
+    return rng.random()

@@ -1,0 +1,20 @@
+"""Fixture: determinism violations in a flow-plane path (parsed only)."""
+import random
+import time
+from datetime import datetime
+
+
+def stamp():
+    return time.time()
+
+
+def arrival_jitter():
+    return random.random()
+
+
+def now_str():
+    return datetime.now()
+
+
+def tick():
+    return time.monotonic()

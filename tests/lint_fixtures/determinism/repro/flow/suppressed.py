@@ -1,0 +1,11 @@
+"""Fixture: determinism exceptions carrying reasons."""
+import time
+
+
+def latency_probe():
+    return time.monotonic()  # agoralint: allow[determinism] wall-latency accounting, not virtual
+
+
+def wall_stamp():
+    # agoralint: allow[determinism] operator-facing log timestamp, never replayed
+    return time.time()

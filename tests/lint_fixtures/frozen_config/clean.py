@@ -1,0 +1,19 @@
+"""Fixture: the whole config closure frozen, plus an unreachable
+mutable dataclass that the closure must NOT flag."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    attempts: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DaemonConfig:
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+
+
+@dataclasses.dataclass
+class ScratchState:
+    # mutable on purpose: not a config root, not field-reachable from one
+    cursor: int = 0

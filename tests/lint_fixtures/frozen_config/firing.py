@@ -1,0 +1,30 @@
+"""Fixture: frozen-config violations — mutable configs on frozen paths."""
+import dataclasses
+from functools import partial
+
+import jax
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    attempts: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DaemonConfig:
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class KernelCfg:
+    tile: int = 128
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def run(x, cfg: KernelCfg):
+    return x

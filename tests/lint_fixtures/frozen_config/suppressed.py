@@ -1,0 +1,7 @@
+"""Fixture: frozen-config exception carrying a reason."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class ChaosConfig:  # agoralint: allow[frozen-config] builder-mutated pre-freeze in this harness
+    seed: int = 0

@@ -1,0 +1,12 @@
+"""Fixture: suppression hygiene — a reasonless allow and a stale allow
+are themselves findings."""
+import time
+
+
+def probe():
+    return time.monotonic()  # agoralint: allow[determinism]
+
+
+def quiet():
+    # agoralint: allow[determinism] nothing here actually fires
+    return 0

@@ -1,0 +1,23 @@
+"""Fixture: every retrace-hazard sub-check fires (parsed, never run)."""
+import dataclasses
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class MutableCfg:
+    steps: int = 8
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve(x, cfg: MutableCfg):
+    scale = float(x)
+    peek = x.item()
+    norm = np.abs(x)
+    return x * scale + peek + norm
+
+
+def dispatch(use_pallas):
+    return None if use_pallas else None

@@ -1,0 +1,22 @@
+"""Fixture: retrace hazards silenced by reasoned suppressions."""
+import dataclasses
+from functools import partial
+
+import jax
+
+
+@dataclasses.dataclass
+class MutableCfg:
+    steps: int = 8
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve(x, cfg: MutableCfg):  # agoralint: allow[retrace-hazard] frozen migration tracked in #10
+    # agoralint: allow[retrace-hazard] concrete-only debug path, never traced abstract
+    scale = float(x)
+    return x * scale
+
+
+def dispatch(use_pallas):
+    # agoralint: allow[retrace-hazard] placeholder until the TPU path lands
+    return None if use_pallas else None

@@ -1,0 +1,28 @@
+"""Fixture: every sanctioned guard idiom for sink.emit."""
+from repro.obs import events as obs
+from repro.obs.events import Event
+
+
+class Emitter:
+    def __init__(self, sink):
+        self.sink = sink
+
+    def notify(self, ts):
+        if self.sink:
+            self.sink.emit(Event(obs.PLAN_SOLVED, ts=ts, data={}))
+
+    def notify_when(self, ts, ready):
+        if ready and self.sink:
+            self.sink.emit(Event(obs.CACHE_HIT, ts=ts, data={}))
+
+    def notify_branch(self, ts, note):
+        if note == "recovered":
+            pass
+        elif self.sink and note == "opened":
+            self.sink.emit(Event(obs.POOL_DEGRADED, ts=ts, data={}))
+
+    def drain(self, events):
+        if not self.sink:
+            return
+        for e in events:
+            self.sink.emit(e)

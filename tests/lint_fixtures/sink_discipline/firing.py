@@ -1,0 +1,14 @@
+"""Fixture: sink-discipline violations (parsed, never run)."""
+from repro.obs.events import Event
+
+
+class Emitter:
+    def __init__(self, sink):
+        self.sink = sink
+
+    def notify(self, event):
+        self.sink.emit(event)
+
+    def notify_literal(self, ts):
+        if self.sink:
+            self.sink.emit(Event("plan_solved", ts=ts, data={}))

@@ -1,0 +1,17 @@
+"""Fixture: sink-discipline exceptions carrying reasons."""
+from repro.obs.events import Event
+
+
+class Emitter:
+    def __init__(self, sink):
+        self.sink = sink
+
+    def replay(self, events):
+        for e in events:
+            # agoralint: allow[sink-discipline] replay: caller passes a live sink on purpose
+            self.sink.emit(e)
+
+    def notify_literal(self, ts):
+        if self.sink:
+            # agoralint: allow[sink-discipline] probing an out-of-schema type in a test helper
+            self.sink.emit(Event("not_a_schema_type", ts=ts, data={}))

@@ -349,3 +349,49 @@ def test_http_hardening_rejects_slow_and_oversized_clients():
     assert huge[0] == 413 and "max_body" in huge[1]["error"]
     assert stalled[0] == 408 and "not received" in stalled[1]["error"]
     assert ok == (200, {"ok": True, "running": True})
+
+
+# ---------------------------------------------------------------------------
+# warped-time replay: virtual timestamps vs wall-latency accounting
+# ---------------------------------------------------------------------------
+
+
+def test_warped_clock_keeps_virtual_timestamps_and_wall_latencies():
+    """Under a warped virtual clock (time_scale >> 1, large epoch offset)
+    the daemon's event timestamps ride the injected clock while dispatch
+    latency accounting stays in genuine wall seconds — the two planes
+    must not leak into each other.  Every deliberate wall-clock read in
+    flow/daemon.py is documented by an `agoralint: allow[determinism]`
+    suppression; this pins the behavior those suppressions assert."""
+    import time as _time
+
+    from repro.obs import events as ev
+    from repro.obs.sink import RingSink
+
+    base, scale = 50_000.0, 64.0
+    t0 = _time.monotonic()
+    ring = RingSink()
+    svc = _service(max_wait_s=30.0, sink=ring,
+                   clock=lambda: base + (_time.monotonic() - t0) * scale,
+                   time_scale=scale)
+    svc.warmup(_chain_dag("tmpl"), max_p=2)
+
+    async def drive():
+        async with svc:
+            return await asyncio.gather(
+                svc.submit(PlanRequest(dag=_chain_dag("a"))),
+                svc.submit(PlanRequest(dag=_chain_dag("b"))))
+
+    res = asyncio.run(drive())
+    assert all(r.validate() == [] for r in res)
+    dispatches = [e for e in ring if e.type == ev.DISPATCH]
+    assert dispatches
+    for e in dispatches:
+        # the event timestamp is on the injected virtual clock
+        assert e.ts >= base
+        # latencies are wall seconds: the warp must not inflate them
+        lats = e.data["latency_s"]
+        assert lats and all(0.0 <= lat < 30.0 for lat in lats)
+    # the aggregator's percentiles fold those same wall numbers
+    st = svc.stats()
+    assert 0.0 <= st["latency"]["p99"] < 30.0

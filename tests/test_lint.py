@@ -1,0 +1,172 @@
+"""agoralint: per-rule fixture tests, suppression semantics, CLI, and the
+self-test that the committed tree is clean.
+
+Fixture corpus layout (``tests/lint_fixtures/<rule_dir>/``): ``firing.py``
+(every sub-check of the rule fires), ``clean.py`` (idiomatic code the rule
+accepts), ``suppressed.py`` (the same hazards silenced by reasoned
+``# agoralint: allow[rule] ...`` comments).  Fixtures are PARSED by the
+linter, never imported — they may reference jax freely.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from tools.lint import (BARE_SUPPRESSION, RULES, UNUSED_SUPPRESSION,
+                        run_lint)
+
+FIXTURES = os.path.join(ROOT, "tests", "lint_fixtures")
+
+ALL_RULES = ("asyncio-blocking", "determinism", "frozen-config",
+             "retrace-hazard", "sink-discipline")
+
+
+def fixture(rule: str, name: str, *sub: str) -> str:
+    return os.path.join(FIXTURES, rule.replace("-", "_"), *sub, name)
+
+
+def test_registry_has_the_contract_rules():
+    assert tuple(sorted(RULES)) == ALL_RULES
+    for r in RULES.values():
+        assert r.summary
+
+
+# -- per-rule: fires / clean / suppressed -----------------------------------
+
+# rule -> (findings expected from firing.py, path parts for determinism's
+# scoped fixtures)
+CASES = [
+    ("retrace-hazard", 5, ()),
+    ("sink-discipline", 2, ()),
+    ("determinism", 4, ("repro", "flow")),
+    ("asyncio-blocking", 3, ()),
+    ("frozen-config", 3, ()),
+]
+
+
+@pytest.mark.parametrize("rule,n_firing,sub", CASES,
+                         ids=[c[0] for c in CASES])
+def test_rule_fires(rule, n_firing, sub):
+    res = run_lint([fixture(rule, "firing.py", *sub)], rules=[rule])
+    assert len(res.findings) == n_firing, [f.render() for f in res.findings]
+    assert all(f.rule == rule for f in res.findings)
+    assert not res.suppressed
+
+
+@pytest.mark.parametrize("rule,n_firing,sub", CASES,
+                         ids=[c[0] for c in CASES])
+def test_rule_clean(rule, n_firing, sub):
+    res = run_lint([fixture(rule, "clean.py", *sub)], rules=[rule])
+    assert not res.findings, [f.render() for f in res.findings]
+    assert not res.suppressed
+
+
+@pytest.mark.parametrize("rule,n_firing,sub", CASES,
+                         ids=[c[0] for c in CASES])
+def test_rule_suppressed(rule, n_firing, sub):
+    res = run_lint([fixture(rule, "suppressed.py", *sub)], rules=[rule])
+    assert not res.findings, [f.render() for f in res.findings]
+    assert res.suppressed, "suppressed fixture should still detect hazards"
+    for f in res.suppressed:
+        assert f.suppressed and f.reason, f.render()
+
+
+# -- rule specifics ---------------------------------------------------------
+
+def test_retrace_firing_covers_every_subcheck():
+    res = run_lint([fixture("retrace-hazard", "firing.py")],
+                   rules=["retrace-hazard"])
+    text = " | ".join(f.message for f in res.findings)
+    for marker in ("identical branches", "non-frozen", "`float(...)`",
+                   "`.item()`", "numpy runs on host"):
+        assert marker in text, text
+
+
+def test_determinism_is_scoped_to_repro_core_flow():
+    # same calls, path outside repro/{core,flow}: not in scope
+    res = run_lint([os.path.join(FIXTURES, "determinism", "outside",
+                                 "wall.py")], rules=["determinism"])
+    assert not res.findings and not res.suppressed
+
+
+def test_frozen_config_flags_closure_not_bystanders():
+    res = run_lint([fixture("frozen-config", "firing.py")],
+                   rules=["frozen-config"])
+    flagged = {f.message.split("`")[1] for f in res.findings}
+    assert flagged == {"RetryPolicy", "ChaosConfig", "KernelCfg"}
+    clean = run_lint([fixture("frozen-config", "clean.py")],
+                     rules=["frozen-config"])
+    assert not clean.findings  # ScratchState is mutable but unreachable
+
+
+def test_asyncio_blocking_allows_executor_lambdas():
+    res = run_lint([fixture("asyncio-blocking", "clean.py")],
+                   rules=["asyncio-blocking"])
+    assert not res.findings  # session.plan inside the executor lambda
+
+
+# -- suppression hygiene ----------------------------------------------------
+
+def test_bare_and_stale_suppressions_are_findings():
+    res = run_lint([os.path.join(FIXTURES, "meta", "bare_and_stale.py")],
+                   rules=["determinism"])
+    rules = sorted(f.rule for f in res.findings)
+    assert rules == [BARE_SUPPRESSION, UNUSED_SUPPRESSION], (
+        [f.render() for f in res.findings])
+
+
+# -- CLI --------------------------------------------------------------------
+
+def run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.lint", *args],
+        cwd=ROOT, capture_output=True, text=True)
+
+
+def test_cli_exit_nonzero_on_findings_and_json_report():
+    proc = run_cli(os.path.relpath(fixture("sink-discipline", "firing.py"),
+                                   ROOT), "--json")
+    assert proc.returncode == 1, proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["ok"] is False
+    assert {f["rule"] for f in report["findings"]} == {"sink-discipline"}
+    for f in report["findings"]:
+        assert {"rule", "path", "line", "message", "suppressed",
+                "reason"} <= set(f)
+
+
+def test_cli_exit_zero_when_all_suppressed():
+    proc = run_cli(os.path.relpath(fixture("sink-discipline",
+                                           "suppressed.py"), ROOT))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_list_rules():
+    proc = run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule in ALL_RULES:
+        assert rule in proc.stdout
+
+
+def test_cli_rejects_unknown_rule():
+    proc = run_cli("--rules", "no-such-rule", "src")
+    assert proc.returncode == 2
+
+
+# -- the tree itself --------------------------------------------------------
+
+def test_committed_tree_is_lint_clean():
+    """The acceptance gate, as a tier-1 test: src/benchmarks/tools lint
+    clean, and every suppression in the tree carries a reason."""
+    res = run_lint([os.path.join(ROOT, d)
+                    for d in ("src", "benchmarks", "tools")])
+    assert res.ok, "\n".join(f.render() for f in res.findings)
+    assert res.files > 50  # sanity: the walk actually saw the tree
+    for f in res.suppressed:
+        assert f.reason, f.render()

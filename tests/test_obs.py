@@ -212,6 +212,36 @@ def test_no_sink_plans_are_bit_identical_to_recorded_plans():
         assert ra.solution.cost == rb.solution.cost
 
 
+class _BoobyTrappedSink(NullSink):
+    """Falsy like NullSink, but ``emit`` raises: proves the disabled
+    plane never constructs or forwards an event at all (the falsy-sink
+    single-truthiness-check contract that `agoralint sink-discipline`
+    enforces lexically — including helper paths like
+    ``PlannerSession._emit_dispatch``)."""
+
+    def emit(self, event):
+        raise AssertionError(f"emit reached a disabled sink: {event}")
+
+
+def test_disabled_sink_is_never_called_and_plans_match():
+    cluster = _cluster((4.0,))
+    price = float(cluster.prices_per_sec[0])
+    dags = [_chain_dag(f"d{i}", 3, 20.0, 1.0, 0.0, price) for i in range(2)]
+    trap = _BoobyTrappedSink()
+    assert not trap                      # still falsy, like NullSink
+    trapped = _agora(cluster).session(shared_capacity=True, bucket_p=4,
+                                      sink=trap)
+    plain = _agora(cluster).session(shared_capacity=True, bucket_p=4)
+    reqs = [PlanRequest(dag=d) for d in dags]
+    a = trapped.plan(reqs)               # any emission would raise here
+    b = plain.plan(reqs)
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.solution.option_idx, rb.solution.option_idx)
+        assert np.array_equal(ra.solution.start, rb.solution.start)
+        assert np.array_equal(ra.solution.finish, rb.solution.finish)
+        assert ra.solution.cost == rb.solution.cost
+
+
 # ---------------------------------------------------------------------------
 # streaming: exactly-once terminal events, event-derived == post-hoc
 

@@ -15,7 +15,10 @@ Checks, over README.md and docs/*.md:
   absolute URLs are skipped);
 * ``docs/events.md`` names every event type in
   ``repro.obs.events.EVENT_TYPES`` and states the current
-  ``SCHEMA_VERSION`` — the schema reference must not drift from the code.
+  ``SCHEMA_VERSION`` — the schema reference must not drift from the code;
+* ``docs/lint.md`` names every rule id registered in ``tools.lint.RULES``
+  plus the runner's built-in finding kinds — same anti-drift gate for the
+  agoralint rule reference.
 """
 from __future__ import annotations
 
@@ -26,8 +29,12 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
 
 from repro.obs.events import EVENT_TYPES, SCHEMA_VERSION  # noqa: E402
+
+from tools.lint import (BARE_SUPPRESSION, RULES,  # noqa: E402
+                        UNUSED_SUPPRESSION)
 
 FENCE = re.compile(r"^```(\S*)([^\n]*)\n(.*?)^```\s*$",
                    re.MULTILINE | re.DOTALL)
@@ -92,6 +99,18 @@ def check_event_reference() -> list[str]:
     return errs
 
 
+def check_lint_reference() -> list[str]:
+    errs = []
+    path = os.path.join(ROOT, "docs", "lint.md")
+    if not os.path.exists(path):
+        return [f"{path}: missing — the agoralint rule reference"]
+    text = open(path).read()
+    for rule_id in (*RULES, BARE_SUPPRESSION, UNUSED_SUPPRESSION):
+        if f"`{rule_id}`" not in text:
+            errs.append(f"{path}: lint rule `{rule_id}` is undocumented")
+    return errs
+
+
 def main() -> int:
     errs = []
     for path in doc_files():
@@ -99,6 +118,7 @@ def main() -> int:
         errs += check_snippets(path, text)
         errs += check_links(path, text)
     errs += check_event_reference()
+    errs += check_lint_reference()
     for e in errs:
         print(e)
     n_docs = len(doc_files())

@@ -1,0 +1,15 @@
+"""agoralint — AST invariant linter for the repo's serving contracts.
+
+Usage: ``python -m tools.lint src benchmarks tools``.  See docs/lint.md
+for the rule reference and ``tools/lint/core.py`` for the engine.
+"""
+from tools.lint.core import (  # noqa: F401
+    BARE_SUPPRESSION,
+    Finding,
+    LintResult,
+    PARSE_RULE,
+    RULES,
+    UNUSED_SUPPRESSION,
+    run_lint,
+)
+import tools.lint.rules  # noqa: F401  (registers the rule set)

@@ -1,0 +1,57 @@
+"""CLI: ``python -m tools.lint [paths...]``.
+
+Exit status is 0 when every finding is suppressed (with a reason) and 1
+otherwise — CI's ``lint-invariants`` job runs exactly this on a bare
+Python (no jax; the linter only parses).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from tools.lint import RULES, run_lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="agoralint: AST invariant linter (see docs/lint.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src benchmarks)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable JSON report on stdout")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rule ids to run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rule ids and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(f"{name}: {RULES[name].summary}")
+        return 0
+
+    subset = None
+    if args.rules:
+        subset = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in subset if r not in RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    result = run_lint(args.paths, rules=subset)
+    if args.json:
+        print(json.dumps(result.to_json(), indent=2))
+    else:
+        for f in result.findings:
+            print(f.render())
+        print(f"agoralint: {result.files} files, "
+              f"{len(result.findings)} finding(s), "
+              f"{len(result.suppressed)} suppressed")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,453 @@
+"""agoralint core: AST invariant linting for the repo's serving contracts.
+
+The serving stack rests on contracts that are documented (docs/events.md,
+docs/operations.md, kernels/README.md) but were only hand-enforced until
+now: the zero-retrace bucket contract around ``jax.jit`` static args, the
+falsy-sink single-truthiness-check emission discipline, the injectable
+virtual-clock determinism chaos replay depends on, and the daemon's
+off-event-loop blocking rule.  Each has already produced at least one
+shipped bug (see docs/lint.md for the per-rule history).  ``agoralint``
+turns them into machine-checked rules.
+
+Deployment model mirrors ``tools/check_docs.py``: pure stdlib, no jax, no
+third-party imports — the CI job runs on a bare Python.  The linter only
+PARSES the tree (``ast`` + ``tokenize``); nothing is imported or executed,
+so it is safe on code whose dependencies are absent.
+
+Suppressions are per-line comments carrying a mandatory reason::
+
+    self.sink.emit(ev)  # agoralint: allow[sink-discipline] replay utility
+
+or, for statements that don't fit a trailing comment, a standalone comment
+on the line directly above the flagged line::
+
+    # agoralint: allow[determinism] wall-latency accounting, not virtual
+    t0 = time.monotonic()
+
+A suppression without a reason is itself a finding (``bare-suppression``),
+and a suppression matching nothing is flagged too (``unused-suppression``)
+so the corpus of deliberate contract exceptions stays reviewed and
+current.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*agoralint:\s*allow\[([A-Za-z0-9_,\s-]+)\]\s*(.*)$")
+
+# rule ids reserved by the runner itself (never registered as Rule objects)
+PARSE_RULE = "parse"
+BARE_SUPPRESSION = "bare-suppression"
+UNUSED_SUPPRESSION = "unused-suppression"
+
+
+# ---------------------------------------------------------------------------
+# Findings and suppressions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation at one source location."""
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+    reason: str = ""                   # the suppression's reason, when any
+
+    def render(self) -> str:
+        tag = " (suppressed: %s)" % self.reason if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}{tag}"
+
+    def to_json(self) -> Dict[str, object]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "suppressed": self.suppressed,
+                "reason": self.reason}
+
+
+@dataclasses.dataclass
+class Suppression:
+    """One ``# agoralint: allow[rule] reason`` comment."""
+    path: str
+    line: int                          # line the comment sits on
+    rules: Tuple[str, ...]
+    reason: str
+    standalone: bool                   # comment-only line -> guards line+1
+    used: bool = False
+
+    @property
+    def target_line(self) -> int:
+        return self.line + 1 if self.standalone else self.line
+
+    def matches(self, finding: Finding) -> bool:
+        return (finding.path == self.path
+                and finding.line == self.target_line
+                and finding.rule in self.rules)
+
+
+# ---------------------------------------------------------------------------
+# Parsed modules and the cross-module context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file plus the lookup structures rules need."""
+    path: str                          # normalized, forward slashes
+    source: str
+    tree: ast.Module
+    parents: Dict[ast.AST, ast.AST]
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+
+@dataclasses.dataclass
+class DataclassInfo:
+    """One ``@dataclasses.dataclass`` class definition."""
+    name: str
+    frozen: bool
+    field_type_names: Tuple[str, ...]  # every identifier in field annotations
+    path: str
+    line: int
+
+
+@dataclasses.dataclass
+class Context:
+    """Cross-module facts collected in one pass before rules run."""
+    modules: List[Module]
+    # class name -> every dataclass definition carrying it (names are
+    # expected unique in this tree; collisions are all checked)
+    dataclasses: Dict[str, List[DataclassInfo]]
+    # dataclass names bound to a jit static arg via a parameter annotation
+    static_bound: Dict[str, str]       # name -> "path:line" of the jit site
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def annotation_names(node: Optional[ast.AST]) -> Tuple[str, ...]:
+    """Every bare identifier mentioned in an annotation expression
+    (``Optional[Tuple[PoolSpec, ...]]`` -> Optional, Tuple, PoolSpec).
+
+    ``Callable[...]`` subscripts are pruned whole: a callable field's
+    parameter/return types are not state the annotated class HOLDS, so
+    they must not pull classes into the frozen-config closure
+    (``router: Callable[[PlanRequest], str]`` does not make the config
+    own a PlanRequest)."""
+    if node is None:
+        return ()
+    names: List[str] = []
+
+    def visit(sub: ast.AST) -> None:
+        if isinstance(sub, ast.Subscript):
+            head = dotted_name(sub.value)
+            if head is not None and head.split(".")[-1] == "Callable":
+                return
+        if isinstance(sub, ast.Name):
+            names.append(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            names.append(sub.attr)
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            # string annotations ("PoolSpec") — take plain identifiers
+            if sub.value.isidentifier():
+                names.append(sub.value)
+        for child in ast.iter_child_nodes(sub):
+            visit(child)
+
+    visit(node)
+    return tuple(names)
+
+
+def _dataclass_decorator(dec: ast.AST) -> Optional[bool]:
+    """``frozen`` flag when ``dec`` is a dataclass decorator, else None."""
+    name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+    if name not in ("dataclass", "dataclasses.dataclass"):
+        return None
+    if isinstance(dec, ast.Call):
+        for kw in dec.keywords:
+            if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                return bool(kw.value.value)
+    return False
+
+
+def collect_dataclasses(module: Module) -> List[DataclassInfo]:
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        frozen = None
+        for dec in node.decorator_list:
+            frozen = _dataclass_decorator(dec)
+            if frozen is not None:
+                break
+        if frozen is None:
+            continue
+        field_names: List[str] = []
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign):
+                field_names.extend(annotation_names(stmt.annotation))
+        out.append(DataclassInfo(node.name, frozen, tuple(field_names),
+                                 module.path, node.lineno))
+    return out
+
+
+# -- jit detection (shared by retrace-hazard and frozen-config) ------------
+
+_JIT_NAMES = ("jax.jit", "jit")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+
+
+def _static_names_from_call(call: ast.Call,
+                            func: ast.FunctionDef) -> Tuple[str, ...]:
+    """Static parameter NAMES from ``static_argnames=`` / ``static_argnums=``
+    keywords of a jit/partial call, resolved against ``func``'s params."""
+    names: List[str] = []
+    params = [a.arg for a in func.args.posonlyargs + func.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if (isinstance(sub, ast.Constant)
+                        and isinstance(sub.value, str)):
+                    names.append(sub.value)
+        elif kw.arg == "static_argnums":
+            for sub in ast.walk(kw.value):
+                if (isinstance(sub, ast.Constant)
+                        and isinstance(sub.value, int)
+                        and 0 <= sub.value < len(params)):
+                    names.append(params[sub.value])
+    return tuple(names)
+
+
+def jit_static_params(func: ast.FunctionDef,
+                      module: Module) -> Optional[Tuple[str, ...]]:
+    """Static param names when ``func`` is jit-decorated (directly, via
+    ``@partial(jax.jit, ...)``, or wrapped by a module-level
+    ``x = jax.jit(func, ...)`` call); None when not jitted at all."""
+    for dec in func.decorator_list:
+        if dotted_name(dec) in _JIT_NAMES:
+            return ()
+        if isinstance(dec, ast.Call):
+            head = dotted_name(dec.func)
+            if head in _JIT_NAMES:
+                return _static_names_from_call(dec, func)
+            if head in _PARTIAL_NAMES and dec.args and (
+                    dotted_name(dec.args[0]) in _JIT_NAMES):
+                return _static_names_from_call(dec, func)
+    # x = jax.jit(func, static_argnames=...) at module level
+    for node in ast.walk(module.tree):
+        if (isinstance(node, ast.Call)
+                and dotted_name(node.func) in _JIT_NAMES and node.args
+                and isinstance(node.args[0], ast.Name)
+                and node.args[0].id == func.name):
+            return _static_names_from_call(node, func)
+    return None
+
+
+def param_annotation(func: ast.FunctionDef, name: str) -> Optional[ast.AST]:
+    for arg in (func.args.posonlyargs + func.args.args
+                + func.args.kwonlyargs):
+        if arg.arg == name:
+            return arg.annotation
+    return None
+
+
+def build_context(modules: List[Module]) -> Context:
+    registry: Dict[str, List[DataclassInfo]] = {}
+    for m in modules:
+        for info in collect_dataclasses(m):
+            registry.setdefault(info.name, []).append(info)
+    static_bound: Dict[str, str] = {}
+    for m in modules:
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            statics = jit_static_params(node, m)
+            if not statics:
+                continue
+            for sname in statics:
+                for type_name in annotation_names(
+                        param_annotation(node, sname)):
+                    if type_name in registry:
+                        static_bound.setdefault(
+                            type_name, f"{m.path}:{node.lineno}")
+    return Context(modules, registry, static_bound)
+
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Rule:
+    name: str
+    summary: str
+    check: Callable[[Module, Context], Iterable[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(name: str, summary: str):
+    """Register a rule: ``@rule("id", "one-line summary")`` over a
+    ``check(module, context) -> iterable[Finding]`` function."""
+    def deco(fn):
+        assert name not in RULES, f"duplicate rule {name}"
+        RULES[name] = Rule(name, summary, fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__" and not d.startswith("."))
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    files.append(os.path.join(root, name))
+    return [_norm(f) for f in files]
+
+
+def parse_module(path: str) -> Tuple[Optional[Module], Optional[Finding]]:
+    with open(path, "rb") as f:
+        raw = f.read()
+    try:
+        source = raw.decode("utf-8")
+        tree = ast.parse(source, filename=path)
+    except (SyntaxError, UnicodeDecodeError) as e:
+        line = getattr(e, "lineno", 1) or 1
+        return None, Finding(PARSE_RULE, path, line,
+                             f"file does not parse: {e}")
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return Module(path, source, tree, parents), None
+
+
+def collect_suppressions(module: Module) -> List[Suppression]:
+    out: List[Suppression] = []
+    lines = module.source.splitlines()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(module.source).readline)
+        comments = [(t.start[0], t.start[1], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    except tokenize.TokenizeError:  # pragma: no cover - parse gate caught it
+        return out
+    for lineno, col, text in comments:
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        reason = m.group(2).strip()
+        before = lines[lineno - 1][:col].strip()
+        out.append(Suppression(module.path, lineno, rules, reason,
+                               standalone=(before == "")))
+    return out
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]            # unsuppressed — these fail the build
+    suppressed: List[Finding]
+    files: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> Dict[str, object]:
+        return {"ok": self.ok, "files": self.files,
+                "findings": [f.to_json() for f in self.findings],
+                "suppressed": [f.to_json() for f in self.suppressed]}
+
+
+def run_lint(paths: Sequence[str],
+             rules: Optional[Sequence[str]] = None) -> LintResult:
+    """Lint every ``*.py`` under ``paths``; returns the partitioned result.
+
+    ``rules`` narrows to a subset of rule ids (default: all registered).
+    The cross-module context (dataclass registry, static-arg bindings) is
+    built over exactly the files being linted, so running on a subtree
+    sees that subtree's world — CI runs it over ``src benchmarks tools``.
+    """
+    active = [RULES[r] for r in (rules or sorted(RULES))]
+    modules: List[Module] = []
+    findings: List[Finding] = []
+    files = iter_py_files(paths)
+    for path in files:
+        module, err = parse_module(path)
+        if err is not None:
+            findings.append(err)
+        else:
+            modules.append(module)
+    ctx = build_context(modules)
+    suppressions: List[Suppression] = []
+    for module in modules:
+        suppressions.extend(collect_suppressions(module))
+        for r in active:
+            findings.extend(r.check(module, ctx))
+    # resolve suppressions (reason mandatory; unused ones are findings)
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        hit = next((s for s in suppressions if s.reason and s.matches(f)),
+                   None)
+        if hit is not None:
+            hit.used = True
+            f.suppressed, f.reason = True, hit.reason
+            suppressed.append(f)
+        else:
+            kept.append(f)
+    for s in suppressions:
+        if not s.reason:
+            kept.append(Finding(
+                BARE_SUPPRESSION, s.path, s.line,
+                f"suppression allow[{','.join(s.rules)}] carries no reason "
+                f"— say why the contract is deliberately bent"))
+        elif not s.used:
+            kept.append(Finding(
+                UNUSED_SUPPRESSION, s.path, s.line,
+                f"suppression allow[{','.join(s.rules)}] matches no "
+                f"finding — stale, remove it"))
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.rule))
+    return LintResult(kept, suppressed, files=len(files))

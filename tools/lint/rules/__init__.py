@@ -1,0 +1,8 @@
+"""Rule modules — importing this package registers every rule."""
+from tools.lint.rules import (  # noqa: F401  (import-for-registration)
+    asyncio_blocking,
+    determinism,
+    frozen_config,
+    retrace,
+    sink_discipline,
+)

@@ -1,0 +1,83 @@
+"""asyncio-blocking: keep the daemon's event loop free of blocking calls.
+
+``flow/daemon.py`` runs one asyncio loop for admission, flush timing, and
+HTTP.  A blocking call in an ``async def`` body stalls every in-flight
+request — and with lock-holding callees it deadlocks: PR 7's
+``snapshot()`` called a lock-taking session method directly from a
+coroutine while the flush path held the same lock.  The repo's rule is
+that blocking work routes through ``loop.run_in_executor(...)``.
+
+Flagged when called DIRECTLY in an ``async def`` body (nested ``def`` /
+``lambda`` scopes are skipped — a lambda handed to ``run_in_executor``
+is exactly the sanctioned pattern):
+
+* ``time.sleep(...)`` — use ``await asyncio.sleep``;
+* ``<...lock...>.acquire(...)`` — threading-lock acquisition; use the
+  executor or an ``asyncio.Lock``;
+* ``<...session...>.plan/plan_many/admit/warmup(...)`` — session methods
+  serialize on the session lock and run full solves.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from tools.lint.core import Context, Finding, Module, dotted_name, rule
+
+_SESSION_METHODS = ("plan", "plan_many", "admit", "warmup", "replan")
+
+
+def _walk_own_scope(func: ast.AsyncFunctionDef) -> Iterator[ast.AST]:
+    """Walk ``func``'s body without descending into nested function or
+    lambda scopes (those run wherever they are *called*, typically an
+    executor thread — not on the event loop)."""
+    stack: list = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _receiver_mentions(node: ast.AST, needle: str) -> bool:
+    name = dotted_name(node)
+    return name is not None and needle in name.lower()
+
+
+@rule("asyncio-blocking",
+      "no direct blocking calls (time.sleep, lock.acquire, session "
+      "plan/admit) inside async def bodies — route through executors")
+def check(module: Module, ctx: Context) -> Iterable[Finding]:
+    for func in ast.walk(module.tree):
+        if not isinstance(func, ast.AsyncFunctionDef):
+            continue
+        for node in _walk_own_scope(func):
+            if not isinstance(node, ast.Call):
+                continue
+            head = dotted_name(node.func)
+            if head == "time.sleep":
+                yield Finding(
+                    "asyncio-blocking", module.path, node.lineno,
+                    f"`time.sleep(...)` inside `async def {func.name}` "
+                    f"stalls the event loop — use `await asyncio.sleep`")
+                continue
+            if not isinstance(node.func, ast.Attribute):
+                continue
+            attr = node.func.attr
+            recv = node.func.value
+            if attr == "acquire" and _receiver_mentions(recv, "lock"):
+                yield Finding(
+                    "asyncio-blocking", module.path, node.lineno,
+                    f"blocking `{dotted_name(node.func)}(...)` inside "
+                    f"`async def {func.name}` — acquire threading locks "
+                    f"off-loop (executor) or use asyncio primitives")
+            elif (attr in _SESSION_METHODS
+                  and _receiver_mentions(recv, "session")):
+                yield Finding(
+                    "asyncio-blocking", module.path, node.lineno,
+                    f"`{dotted_name(node.func)}(...)` inside `async def "
+                    f"{func.name}` — session methods hold the session "
+                    f"lock and solve; route through run_in_executor "
+                    f"(the PR 7 snapshot() self-deadlock class)")

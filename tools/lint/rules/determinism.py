@@ -1,0 +1,82 @@
+"""determinism: clock and randomness hygiene in the planning core.
+
+Chaos replay (PR 9) and the event-tape golden tests depend on
+``src/repro/{core,flow}`` being a deterministic function of (inputs,
+seeds, injected clock).  Wall-clock reads and ambient randomness break
+replay silently — the run works, the tape never matches again.
+
+Scoped to paths containing ``repro/core/`` or ``repro/flow/``:
+
+* ``time.time(...)`` — wall clock; use the injected clock
+  (``DaemonConfig.clock``) or ``time.monotonic`` for pure durations;
+* ``datetime.now/utcnow/today`` — same, plus timezone nondeterminism;
+* ``random.*`` — ambient stdlib randomness; use seeded
+  ``np.random.default_rng``/JAX keys threaded from config seeds
+  (``ChaosConfig.seed``) instead.
+
+Additionally, in ``repro/flow/`` only (the virtual-clock daemon plane):
+
+* ``time.monotonic(...)`` / ``time.perf_counter(...)`` calls — virtual
+  time must come from the injected clock so warped replay
+  (``DaemonConfig.time_scale``) stays coherent.  Genuine wall-latency
+  accounting (breaker latencies, HTTP timings) is the intended
+  exception: suppress with a reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.lint.core import Context, Finding, Module, dotted_name, rule
+
+_WALL_CLOCKS = ("time.time",)
+_DATETIME_NOW = ("datetime.now", "datetime.datetime.now",
+                 "datetime.utcnow", "datetime.datetime.utcnow",
+                 "datetime.today", "datetime.datetime.today")
+_FLOW_CLOCKS = ("time.monotonic", "time.perf_counter")
+
+
+def _in_scope(path: str) -> bool:
+    return "repro/core/" in path or "repro/flow/" in path
+
+
+def _in_flow(path: str) -> bool:
+    return "repro/flow/" in path
+
+
+@rule("determinism",
+      "no wall clocks or ambient randomness in repro/{core,flow}; flow "
+      "clock reads go through the injected clock")
+def check(module: Module, ctx: Context) -> Iterable[Finding]:
+    if not _in_scope(module.path):
+        return
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        head = dotted_name(node.func)
+        if head is None:
+            continue
+        if head in _WALL_CLOCKS:
+            yield Finding(
+                "determinism", module.path, node.lineno,
+                "`time.time()` in the deterministic core — wall clock "
+                "breaks chaos replay; use the injected clock or "
+                "`time.monotonic` for durations")
+        elif head in _DATETIME_NOW:
+            yield Finding(
+                "determinism", module.path, node.lineno,
+                f"`{head}()` in the deterministic core — ambient "
+                f"wall-clock/timezone read; thread time in explicitly")
+        elif head.startswith("random."):
+            yield Finding(
+                "determinism", module.path, node.lineno,
+                f"`{head}(...)` is ambient stdlib randomness — use seeded "
+                f"`np.random.default_rng` / JAX keys derived from config "
+                f"seeds (ChaosConfig.seed)")
+        elif _in_flow(module.path) and head in _FLOW_CLOCKS:
+            yield Finding(
+                "determinism", module.path, node.lineno,
+                f"raw `{head}()` in the virtual-clock flow plane — route "
+                f"through the injected clock (DaemonConfig.clock) so "
+                f"warped replay stays coherent, or suppress as "
+                f"wall-latency accounting")

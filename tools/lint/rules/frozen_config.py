@@ -1,0 +1,60 @@
+"""frozen-config: config dataclasses on static/replay paths stay frozen.
+
+Two forces require immutability here.  First, ``jax.jit`` static args are
+hashed per call — a config reachable from a static position must be
+``frozen=True`` to be hashable at all, and mutation after warmup would
+invalidate every warmed signature (the zero-retrace contract).  Second,
+chaos replay assumes a run is a pure function of its configs: a config
+mutated mid-run cannot be replayed from its constructor arguments.
+
+The rule seeds a root set — the known serving-plane config classes plus
+any dataclass the cross-module pass saw annotated on a jit static arg —
+and takes the transitive closure over field annotations (a frozen config
+holding a mutable config is still mutable where it matters).  Every
+dataclass in the closure must declare ``frozen=True``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Set
+
+from tools.lint.core import Context, Finding, Module, rule
+
+# Serving-plane config roots: bound to jit static args (VecConfig,
+# IsingConfig via session engines) or constructor-replayed by chaos
+# (DaemonConfig/StreamConfig/FlowConfig/ChaosConfig).
+ROOTS = ("DaemonConfig", "StreamConfig", "FlowConfig", "ChaosConfig",
+         "VecConfig", "IsingConfig")
+
+
+def _closure(ctx: Context) -> Set[str]:
+    seen: Set[str] = set()
+    frontier = [n for n in (*ROOTS, *ctx.static_bound)
+                if n in ctx.dataclasses]
+    while frontier:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for info in ctx.dataclasses[name]:
+            frontier.extend(f for f in info.field_type_names
+                            if f in ctx.dataclasses and f not in seen)
+    return seen
+
+
+@rule("frozen-config",
+      "dataclasses reachable from jit static args or the serving config "
+      "roots must be frozen=True")
+def check(module: Module, ctx: Context) -> Iterable[Finding]:
+    required = _closure(ctx)
+    for name in sorted(required):
+        for info in ctx.dataclasses[name]:
+            if info.path != module.path or info.frozen:
+                continue
+            via = ctx.static_bound.get(name)
+            how = (f"bound to a jit static arg at {via}" if via
+                   else "reachable from the serving config roots")
+            yield Finding(
+                "frozen-config", module.path, info.line,
+                f"dataclass `{name}` is {how} but not frozen=True — "
+                f"static args must hash and replay assumes configs are "
+                f"immutable")

@@ -1,0 +1,111 @@
+"""retrace-hazard: the zero-retrace bucket contract around ``jax.jit``.
+
+The serving plane's throughput rests on compile-once/serve-many: every
+``jax.jit`` signature is warmed per power-of-two bucket and
+``session.stats`` asserts zero re-traces afterward.  That contract breaks
+silently when
+
+* a static arg binds an unhashable / non-frozen value — jit hashes static
+  args per call, so a mutable dataclass either crashes or, worse, retraces
+  on every identity change;
+* a conditional collapses to the same value on both branches — PR 4
+  shipped ``interpret=(None if use_pallas else None)``, a dead tri-state
+  that pinned the kernel to one dispatch path for a full release;
+* traced values leak to the host mid-trace via ``float()``/``int()``/
+  ``bool()``/``.item()`` or a ``np.`` call — each is a device sync and a
+  concretization error waiting for the first abstract tracer.
+
+Host-leak detection is heuristic by design: a call is flagged only when
+its arguments mention a NON-static parameter of the jit-decorated
+function (static params are plain Python values, so ``int(T)`` on a
+static ``T`` is fine and common in shape math).  Locals derived from
+traced params are not chased — the linter parses, it does not infer
+dataflow.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set, Tuple
+
+from tools.lint.core import (
+    Context,
+    Finding,
+    Module,
+    annotation_names,
+    dotted_name,
+    jit_static_params,
+    param_annotation,
+    rule,
+)
+
+_HOST_CASTS = ("float", "int", "bool")
+
+
+def _mentions(node: ast.AST, names: Set[str]) -> bool:
+    return any(isinstance(sub, ast.Name) and sub.id in names
+               for sub in ast.walk(node))
+
+
+def _host_leaks(func: ast.FunctionDef, statics: Tuple[str, ...],
+                module: Module) -> Iterable[Finding]:
+    traced = {a.arg for a in (func.args.posonlyargs + func.args.args
+                              + func.args.kwonlyargs)} - set(statics)
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Call):
+            continue
+        head = dotted_name(node.func)
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in _HOST_CASTS
+                and any(_mentions(a, traced) for a in node.args)):
+            yield Finding(
+                "retrace-hazard", module.path, node.lineno,
+                f"`{node.func.id}(...)` on a traced argument inside "
+                f"jit-decorated `{func.name}` — host concretization "
+                f"breaks under abstract tracers and syncs the device")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "item"
+              and _mentions(node.func.value, traced)):
+            yield Finding(
+                "retrace-hazard", module.path, node.lineno,
+                f"`.item()` on a traced value inside jit-decorated "
+                f"`{func.name}` — device sync / concretization hazard")
+        elif (head is not None
+              and head.split(".")[0] in ("np", "numpy")
+              and any(_mentions(a, traced) for a in node.args)):
+            yield Finding(
+                "retrace-hazard", module.path, node.lineno,
+                f"`{head}(...)` on a traced argument inside jit-decorated "
+                f"`{func.name}` — numpy runs on host; use `jnp`")
+
+
+@rule("retrace-hazard",
+      "jit static args must be frozen/hashable; no dead tri-states or "
+      "host-sync calls inside jit bodies")
+def check(module: Module, ctx: Context) -> Iterable[Finding]:
+    # dead tri-state: both branches of a conditional are the same
+    # expression, so the condition is decoration (the PR 4 interpret bug)
+    for node in ast.walk(module.tree):
+        if (isinstance(node, ast.IfExp)
+                and ast.dump(node.body) == ast.dump(node.orelse)):
+            yield Finding(
+                "retrace-hazard", module.path, node.lineno,
+                "conditional expression has identical branches — the "
+                "condition is dead (the PR 4 `interpret=(None if use_pallas "
+                "else None)` bug class)")
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        statics = jit_static_params(node, module)
+        if statics is None:
+            continue
+        for sname in statics:
+            for type_name in annotation_names(param_annotation(node, sname)):
+                for info in ctx.dataclasses.get(type_name, []):
+                    if not info.frozen:
+                        yield Finding(
+                            "retrace-hazard", module.path, node.lineno,
+                            f"static arg `{sname}` of `{node.name}` is "
+                            f"annotated `{type_name}`, a non-frozen "
+                            f"dataclass ({info.path}:{info.line}) — static "
+                            f"args must be hashable and immutable")
+        yield from _host_leaks(node, statics, module)

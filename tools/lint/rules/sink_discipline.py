@@ -1,0 +1,140 @@
+"""sink-discipline: the falsy-sink emission contract, machine-checked.
+
+The observability plane's contract (``src/repro/obs/sink.py``) is::
+
+    if self.sink:                      # ONE truthiness check when disabled
+        self.sink.emit(Event(...))     # Event built only when enabled
+
+``NULL`` is falsy, so guarded sites cost one branch with observability
+off and plans stay bit-for-bit identical.  An UNGUARDED ``sink.emit``
+still "works" (NullSink.emit is a no-op) — which is exactly why the drift
+is invisible in tests: the Event is constructed and the emission machinery
+runs on every hot-path call, silently taxing the disabled plane.  PR 7
+shipped the contract; unguarded ``self.sink.emit`` sites had already
+crept back into ``core/session.py`` by PR 9.
+
+Two checks per ``<...>.sink.emit(...)`` / ``sink.emit(...)`` call:
+
+* the call must sit under a truthiness guard of the SAME sink expression
+  (``if self.sink:``, ``if self.sink and ...:``, or an early-return
+  ``if not self.sink: return`` earlier in the enclosing function);
+* an inline ``Event(...)`` argument must name its type through a constant
+  (``obs.PLAN_SOLVED``), never a string literal — string literals bypass
+  the ``EVENT_TYPES`` vocabulary that ``docs/events.md`` and the schema
+  golden test pin.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from tools.lint.core import Context, Finding, Module, dotted_name, rule
+
+
+def _sink_receiver(call: ast.Call) -> Optional[ast.AST]:
+    """The ``<sink>`` expression of a ``<sink>.emit(...)`` call when the
+    receiver is an attribute or bare name called ``sink``; else None."""
+    func = call.func
+    if not (isinstance(func, ast.Attribute) and func.attr == "emit"):
+        return None
+    recv = func.value
+    if isinstance(recv, ast.Attribute) and recv.attr == "sink":
+        return recv
+    if isinstance(recv, ast.Name) and recv.id == "sink":
+        return recv
+    return None
+
+
+def _positive_occurrence(test: ast.AST, sink_dump: str) -> bool:
+    """True when ``test`` mentions the sink expression OUTSIDE a ``not``
+    (``if self.sink:``, ``if x and self.sink:``; NOT ``if not self.sink:``,
+    whose true-branch is the disabled path)."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return False
+    if ast.dump(test) == sink_dump:
+        return True
+    if isinstance(test, ast.BoolOp):
+        return any(_positive_occurrence(v, sink_dump) for v in test.values)
+    return False
+
+
+def _is_early_return_guard(stmt: ast.stmt, sink_dump: str) -> bool:
+    """``if not <sink>: return/raise/continue`` — the guard style helper
+    methods use when the whole function body is emission."""
+    if not (isinstance(stmt, ast.If) and not stmt.orelse):
+        return False
+    test = stmt.test
+    if not (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)
+            and ast.dump(test.operand) == sink_dump):
+        return False
+    return bool(stmt.body) and isinstance(
+        stmt.body[-1], (ast.Return, ast.Raise, ast.Continue))
+
+
+def _guarded(module: Module, call: ast.Call, sink: ast.AST) -> bool:
+    sink_dump = ast.dump(sink)
+    node: ast.AST = call
+    for parent in module.ancestors(call):
+        if isinstance(parent, ast.If) and node in getattr(parent, "body", []):
+            if _positive_occurrence(parent.test, sink_dump):
+                return True
+        if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            # early-return guard anywhere before the emitting statement
+            body = getattr(parent, "body", [])
+            if isinstance(body, list):
+                for stmt in body:
+                    if (hasattr(stmt, "lineno")
+                            and stmt.lineno >= call.lineno):
+                        break
+                    if _is_early_return_guard(stmt, sink_dump):
+                        return True
+            return False               # scope boundary: guards don't cross
+        node = parent
+    return False
+
+
+def _event_type_literals(call: ast.Call) -> List[ast.Constant]:
+    """String-literal event types inside an inline ``Event(...)`` arg."""
+    out: List[ast.Constant] = []
+    for arg in call.args:
+        if not (isinstance(arg, ast.Call)
+                and (dotted_name(arg.func) or "").split(".")[-1] == "Event"):
+            continue
+        etype: Optional[ast.AST] = arg.args[0] if arg.args else None
+        for kw in arg.keywords:
+            if kw.arg == "type":
+                etype = kw.value
+        if etype is None:
+            continue
+        candidates = ([etype.body, etype.orelse]
+                      if isinstance(etype, ast.IfExp) else [etype])
+        for c in candidates:
+            if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                out.append(c)
+    return out
+
+
+@rule("sink-discipline",
+      "sink.emit must be truthiness-guarded; event types must be "
+      "EVENT_TYPES constants, not string literals")
+def check(module: Module, ctx: Context) -> Iterable[Finding]:
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        sink = _sink_receiver(node)
+        if sink is None:
+            continue
+        recv = dotted_name(sink) or "sink"
+        if not _guarded(module, node, sink):
+            yield Finding(
+                "sink-discipline", module.path, node.lineno,
+                f"`{recv}.emit(...)` is not guarded by `if {recv}:` — the "
+                f"falsy-sink contract requires one truthiness check so the "
+                f"disabled plane never builds the event")
+        for lit in _event_type_literals(node):
+            yield Finding(
+                "sink-discipline", module.path, lit.lineno,
+                f"event type {lit.value!r} is a string literal — use the "
+                f"EVENT_TYPES constant (e.g. obs.{lit.value.upper()}) so "
+                f"the schema reference and golden test keep covering it")
